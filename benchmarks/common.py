@@ -1,0 +1,81 @@
+"""Shared benchmark utilities: cached policy training + method suites.
+
+Scale note (documented deviation, DESIGN.md §3): the paper trains 40k
+batches of 128 instances on 2x2080Ti. This container is one CPU core, so
+benchmark policies train a few hundred-to-thousand batches at lr 3e-4
+(instead of 1e-5) on the same instance distribution; the qualitative
+ordering (CoRaiS ~ REF << Random/Local, real-time decisions) is what the
+reproduction checks. ``--full`` raises the budget.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.core import InstanceConfig, PolicyConfig, RLConfig
+from repro.core.train import train
+from repro.optim import AdamConfig, adam_init
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+POLICY_DIM = 128  # benchmark-scale policy (paper-faithful 256 via --full)
+
+
+def rl_config(en: int, rn: int, batches: int, d_model: int = POLICY_DIM,
+              lr: float = 3e-4) -> RLConfig:
+    return RLConfig(
+        policy=PolicyConfig(d_model=d_model),
+        instance=InstanceConfig(num_edges=en, num_requests=rn),
+        batch_size=32,
+        num_samples=32,
+        lr=lr,
+        num_batches=batches,
+        seed=0,
+    )
+
+
+def get_trained_policy(en: int = 5, rn: int = 50, batches: int = 800,
+                       d_model: int = POLICY_DIM, verbose: bool = True):
+    """Train (or load cached) a CoRaiS policy for scale (EN, RN)."""
+    cfg = rl_config(en, rn, batches, d_model)
+    tag = f"policy_en{en}_rn{rn}_d{d_model}_b{batches}"
+    ckpt = Checkpointer(os.path.join(RESULTS, tag), every=10**9,
+                        async_save=False)
+    from repro.core.policy import corais_init
+    template = jax.eval_shape(
+        lambda: corais_init(jax.random.PRNGKey(cfg.seed), cfg.policy))
+    opt_template = jax.eval_shape(
+        lambda: adam_init(template[0], AdamConfig(lr=cfg.lr)))
+    restored = ckpt.restore_latest({"params": template[0],
+                                    "state": template[1],
+                                    "opt_state": opt_template})
+    if restored is not None:
+        if verbose:
+            print(f"# loaded cached policy {tag}")
+        return restored["tree"]["params"], restored["tree"]["state"], cfg
+
+    t0 = time.time()
+    cb = (lambda m: print(f"#   batch {m['batch']} cost {m['cost_mean']:.3f}")) \
+        if verbose else None
+    params, state, opt_state, hist = train(cfg, callback=cb)
+    if verbose:
+        print(f"# trained {batches} batches in {time.time()-t0:.0f}s "
+              f"(cost {hist[0]['cost_mean']:.3f} -> {hist[-1]['cost_mean']:.3f})")
+    ckpt.save(batches, {"params": params, "state": state,
+                        "opt_state": opt_state})
+    ckpt.wait()
+    return params, state, cfg
+
+
+def eval_instances(en: int, rn: int, n: int, seed: int = 999):
+    rng = np.random.default_rng(seed)
+    from repro.core import generate_instance
+    return [generate_instance(rng, InstanceConfig(num_edges=en, num_requests=rn))
+            for _ in range(n)]
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

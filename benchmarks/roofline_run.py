@@ -1,0 +1,73 @@
+"""Roofline table (task spec g): renders results/dryrun.json into the
+per-(arch x shape) three-term table; optionally re-runs selected cells with
+a variant config for the §Perf hillclimb.
+
+    python -m benchmarks.roofline_run                 # print table
+    python -m benchmarks.roofline_run --csv           # bench CSV lines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import RESULTS, csv_line
+
+DRYRUN = os.path.join(RESULTS, "dryrun.json")
+
+
+def load(path=DRYRUN, mesh="single", variant="baseline"):
+    with open(path) as f:
+        rows = json.load(f)
+    return [r for r in rows
+            if r["mesh"] == mesh and r.get("variant", "baseline") == variant]
+
+
+def fmt_table(rows):
+    out = ["arch                 shape        comp_s   mem_s    coll_s   "
+           "dominant    useful  bound_s"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            out.append(f"{r['arch']:20s} {r['shape']:12s} "
+                       f"SKIPPED ({r['reason'][:48]})")
+            continue
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:20s} {r['shape']:12s} FAILED")
+            continue
+        t = r["terms"]
+        out.append(
+            f"{r['arch']:20s} {r['shape']:12s} "
+            f"{t['compute_s']:8.4f} {t['memory_s']:8.4f} "
+            f"{t['collective_s']:8.4f} {t['dominant']:10s} "
+            f"{t['useful_flop_ratio']:6.3f} {t['bound_s']:8.4f}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    if not os.path.exists(DRYRUN):
+        print("roofline/none,0.0,run `python -m repro.launch.dryrun --all` first")
+        return
+    rows = load(mesh=args.mesh, variant=args.variant)
+    if args.csv:
+        for r in rows:
+            if r["status"] != "ok":
+                continue
+            t = r["terms"]
+            print(csv_line(
+                f"roofline/{r['arch']}/{r['shape']}/{args.mesh}",
+                t["bound_s"] * 1e6,
+                f"dominant={t['dominant']};compute_s={t['compute_s']:.5f};"
+                f"memory_s={t['memory_s']:.5f};"
+                f"collective_s={t['collective_s']:.5f};"
+                f"useful={t['useful_flop_ratio']:.3f}"))
+    else:
+        print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

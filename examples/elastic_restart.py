@@ -1,0 +1,13 @@
+"""Elastic-scaling example: train on an 8-device mesh, lose half the
+devices, resume on a 4-device mesh from the same checkpoint (resharded).
+
+Run:  PYTHONPATH=src python examples/elastic_restart.py
+(thin wrapper over repro.launch.elastic, which must own process start-up
+because device count is locked at first jax import)."""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    raise SystemExit(subprocess.run(
+        [sys.executable, "-m", "repro.launch.elastic", "--steps", "4"],
+    ).returncode)

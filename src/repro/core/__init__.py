@@ -1,0 +1,19 @@
+"""The paper's primary contribution: system-level state model, ILP
+formulation, and the CoRaiS learning-based real-time scheduler."""
+from repro.core.instances import InstanceConfig, generate_batch, generate_instance
+from repro.core.objective import makespan, makespan_np, per_edge_times, per_edge_times_np
+from repro.core.policy import PolicyConfig, corais_apply, corais_init
+from repro.core.decode import greedy_decode, sampling_decode, assignment_log_prob
+from repro.core.train import RLConfig, make_train_step, train
+from repro.core.ablations import variant_config
+from repro.core.state import EdgeServiceState, PhiEstimator, QueuedRequest, snapshot_instance
+
+__all__ = [
+    "InstanceConfig", "generate_batch", "generate_instance",
+    "makespan", "makespan_np", "per_edge_times", "per_edge_times_np",
+    "PolicyConfig", "corais_apply", "corais_init",
+    "greedy_decode", "sampling_decode", "assignment_log_prob",
+    "RLConfig", "make_train_step", "train",
+    "variant_config",
+    "EdgeServiceState", "PhiEstimator", "QueuedRequest", "snapshot_instance",
+]

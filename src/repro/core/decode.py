@@ -1,0 +1,45 @@
+"""Decode strategies (paper §IV-C): greedy and best-of-n sampling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objective import makespan
+
+
+def greedy_decode(log_probs) -> jax.Array:
+    """argmax_q a_qz per request. log_probs: (..., Z, Q) -> (..., Z)."""
+    return jnp.argmax(log_probs, axis=-1).astype(jnp.int32)
+
+
+def sample_assignments(key, log_probs, num_samples: int) -> jax.Array:
+    """Draw S assignments from the factorized policy.
+
+    log_probs: (Z, Q) -> (S, Z). For batched instances vmap this.
+    """
+    return jax.random.categorical(
+        key, log_probs[None, :, :], axis=-1, shape=(num_samples,) + log_probs.shape[:-1]
+    ).astype(jnp.int32)
+
+
+def sampling_decode(key, inst, log_probs, num_samples: int):
+    """Best-of-n sampling decode: sample n complete decisions, evaluate
+    eq (19) for each, return (best_assignment, best_makespan).
+
+    Always includes the greedy decision as one candidate (costless and
+    guards the tail of the sampling distribution).
+    """
+    samples = sample_assignments(key, log_probs, num_samples)  # (S, Z)
+    samples = jnp.concatenate([greedy_decode(log_probs)[None], samples], axis=0)
+    costs = jax.vmap(lambda a: makespan(inst, a))(samples)
+    best = jnp.argmin(costs)
+    return samples[best], costs[best]
+
+
+def assignment_log_prob(log_probs, assign, req_mask) -> jax.Array:
+    """log p(pi) = sum_z log a_{x_z, z} over real requests.
+
+    log_probs: (..., Z, Q); assign: (..., Z) -> (...)."""
+    lp = jnp.take_along_axis(log_probs, assign[..., None].astype(jnp.int32), axis=-1)
+    lp = jnp.squeeze(lp, -1) * req_mask.astype(lp.dtype)
+    return jnp.sum(lp, axis=-1)

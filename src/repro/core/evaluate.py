@@ -1,0 +1,110 @@
+"""Evaluation harness: gaps vs. the reference solver (paper §V, eq 22)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import instances as inst_lib
+from repro.core.decode import greedy_decode, sampling_decode
+from repro.core.heuristics import solve_ils, solve_local, solve_random
+from repro.core.objective import makespan_np
+from repro.core.policy import PolicyConfig, corais_apply
+
+
+@dataclasses.dataclass
+class MethodResult:
+    name: str
+    mean_time_s: float
+    mean_cost: float
+    mean_gap: float
+    solved_frac: float = 1.0
+
+
+def _policy_method(params, state, cfg: PolicyConfig, mode: str, n: int, seed: int):
+    """Returns fn(inst) -> (assign, solve_time). jit once, reuse across
+    instances of identical padded shape (the paper's real-time setting)."""
+
+    @jax.jit
+    def forward(inst):
+        lp, _ = corais_apply(params, state, inst, cfg, training=False)
+        return lp
+
+    @jax.jit
+    def decode_sample(inst, lp, key):
+        assign, cost = sampling_decode(key, inst, lp, n)
+        return assign
+
+    key_holder = [jax.random.PRNGKey(seed)]
+
+    def run(inst):
+        jinst = jax.tree.map(jnp.asarray, inst)
+        t0 = time.perf_counter()
+        lp = forward(jinst)
+        if mode == "greedy":
+            assign = greedy_decode(lp)
+        else:
+            key_holder[0], sub = jax.random.split(key_holder[0])
+            assign = decode_sample(jinst, lp, sub)
+        assign = np.asarray(jax.block_until_ready(assign))
+        return assign, time.perf_counter() - t0
+
+    return run
+
+
+def evaluate_methods(
+    instances: list,
+    methods: dict[str, Callable],
+    reference: str,
+) -> dict[str, MethodResult]:
+    """Run every method on every instance; gap_b = L(pi|b) / L(pi|REF)."""
+    per_method_costs: dict[str, list[float]] = {m: [] for m in methods}
+    per_method_times: dict[str, list[float]] = {m: [] for m in methods}
+    for inst in instances:
+        for name, fn in methods.items():
+            t0 = time.perf_counter()
+            out = fn(inst)
+            if isinstance(out, tuple):
+                assign, dt = out
+            else:
+                assign, dt = out, time.perf_counter() - t0
+            per_method_costs[name].append(makespan_np(inst, assign))
+            per_method_times[name].append(dt)
+
+    ref_costs = np.asarray(per_method_costs[reference])
+    results = {}
+    for name in methods:
+        costs = np.asarray(per_method_costs[name])
+        gaps = costs / np.maximum(ref_costs, 1e-9)
+        results[name] = MethodResult(
+            name=name,
+            mean_time_s=float(np.mean(per_method_times[name])),
+            mean_cost=float(np.mean(costs)),
+            mean_gap=float(np.mean(gaps)),
+        )
+    return results
+
+
+def standard_method_suite(
+    params=None,
+    state=None,
+    policy_cfg: Optional[PolicyConfig] = None,
+    ref_budget_s: float = 1.0,
+    random_ns=(1, 100, 1000),
+    sample_ns=(100, 1000),
+):
+    """The paper's Table II method set, minus Gurobi (see DESIGN.md §3)."""
+    methods: dict[str, Callable] = {}
+    methods[f"ILS({ref_budget_s}s)"] = lambda inst: solve_ils(inst, budget_s=ref_budget_s)
+    methods["Local"] = solve_local
+    for n in random_ns:
+        methods[f"Random({n})"] = (lambda n_: lambda inst: solve_random(inst, n_, seed=0))(n)
+    if params is not None:
+        methods["CoRaiS(greedy)"] = _policy_method(params, state, policy_cfg, "greedy", 0, seed=0)
+        for n in sample_ns:
+            methods[f"CoRaiS({n})"] = _policy_method(params, state, policy_cfg, "sample", n, seed=n)
+    return methods

@@ -1,0 +1,140 @@
+"""CoMEC / CoR instance representation and synthetic generation (paper §V.A).
+
+An *instance* is one scheduling round: the service-oriented subsystem state
+CoMEC = (E, W, V, P, I) plus the request set CoR = (R, L, F). Instances are
+plain dict pytrees with fixed (padded) shapes so they batch under vmap/jit:
+
+    edge_coords : (Q, 2) f32   edge positions, U(0,1)^2
+    phi         : (Q, 2) f32   phi_q(x) = phi[q,0] * x + phi[q,1]
+    replicas    : (Q,)  f32    service replica count zeta_q, U{1..4}
+    workload    : (Q, 3) f32   (c_le, c_in, t_in) from eqs (1)-(3)
+    w           : (Q, Q) f32   transmission distance matrix (w_ii = 0)
+    ct          : ()    f32    transmission speed constant C_t
+    req_src     : (Z,)  i32    source edge index of each request
+    req_size    : (Z,)  f32    input data size f_z, U(0,1)
+    edge_mask   : (Q,)  bool   True for real (non-padding) edges
+    req_mask    : (Z,)  bool   True for real requests
+
+Padding lets one jitted policy/objective handle mixed system scales, which
+is exactly the generalization axis the paper evaluates (Table III).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+Instance = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceConfig:
+    num_edges: int = 5                 # Q (EN in the paper's tables)
+    num_requests: int = 50             # Z (RN in the paper's tables)
+    max_edges: Optional[int] = None    # padded Q (defaults to num_edges)
+    max_requests: Optional[int] = None
+    max_replicas: int = 4              # zeta ~ U{1..max_replicas}
+    backlog_high: int = 100            # |Q^le|, |Q^in| ~ U(0, backlog_high)
+    ct: float = 1.0                    # C_t
+    phi_low: float = 0.0               # phi coefficients ~ U(phi_low, phi_high)
+    phi_high: float = 1.0
+
+    @property
+    def q_pad(self) -> int:
+        return self.max_edges or self.num_edges
+
+    @property
+    def z_pad(self) -> int:
+        return self.max_requests or self.num_requests
+
+
+def _phi_eval(phi_row: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return phi_row[0] * x + phi_row[1]
+
+
+def generate_instance(rng: np.random.Generator, cfg: InstanceConfig) -> Instance:
+    """Sample one instance exactly per the paper's rules (§V.A)."""
+    q, z = cfg.num_edges, cfg.num_requests
+    qp, zp = cfg.q_pad, cfg.z_pad
+    assert q <= qp and z <= zp
+
+    coords = rng.uniform(0.0, 1.0, size=(qp, 2)).astype(np.float32)
+    # phi(x) = a x + b with heterogeneous coefficients ~ U(0, 1)
+    phi = rng.uniform(cfg.phi_low, cfg.phi_high, size=(qp, 2)).astype(np.float32)
+    replicas = rng.integers(1, cfg.max_replicas + 1, size=(qp,)).astype(np.float32)
+    w = np.linalg.norm(coords[:, None, :] - coords[None, :, :], axis=-1).astype(np.float32)
+    np.fill_diagonal(w, 0.0)
+
+    # Backlogs -> workload features via eqs (1)-(3).
+    c_le = np.zeros(qp, np.float32)
+    c_in = np.zeros(qp, np.float32)
+    t_in = np.zeros(qp, np.float32)
+    for i in range(q):
+        n_le = rng.integers(0, cfg.backlog_high)
+        n_in = rng.integers(0, cfg.backlog_high)
+        if n_le:
+            sizes = rng.uniform(0.0, 1.0, size=n_le).astype(np.float32)
+            c_le[i] = _phi_eval(phi[i], sizes).sum() / replicas[i]          # eq (1)
+        if n_in:
+            sizes = rng.uniform(0.0, 1.0, size=n_in).astype(np.float32)
+            srcs = rng.choice([j for j in range(q) if j != i], size=n_in)
+            c_in[i] = _phi_eval(phi[i], sizes).sum() / replicas[i]          # eq (3)
+            t_in[i] = float(np.max(cfg.ct * sizes * w[srcs, i]))            # eq (2)
+
+    req_src = rng.integers(0, q, size=(zp,)).astype(np.int32)
+    req_size = rng.uniform(0.0, 1.0, size=(zp,)).astype(np.float32)
+
+    edge_mask = np.zeros(qp, bool)
+    edge_mask[:q] = True
+    req_mask = np.zeros(zp, bool)
+    req_mask[:z] = True
+    # Padding hygiene: dead edges get no requests and zero features.
+    req_src[z:] = 0
+    req_size[z:] = 0.0
+    phi[q:] = 0.0
+    replicas[q:] = 1.0
+    coords[q:] = 0.0
+
+    return {
+        "edge_coords": coords,
+        "phi": phi,
+        "replicas": replicas,
+        "workload": np.stack([c_le, c_in, t_in], axis=-1),
+        "w": w,
+        "ct": np.float32(cfg.ct),
+        "req_src": req_src,
+        "req_size": req_size,
+        "edge_mask": edge_mask,
+        "req_mask": req_mask,
+    }
+
+
+def generate_batch(rng: np.random.Generator, cfg: InstanceConfig, batch: int) -> Instance:
+    """Stack ``batch`` instances into one pytree with a leading batch axis."""
+    insts = [generate_instance(rng, cfg) for _ in range(batch)]
+    return {k: np.stack([inst[k] for inst in insts]) for k in insts[0]}
+
+
+def edge_features(inst: Instance) -> np.ndarray:
+    """Paper §IV-A edge encoder inputs: coords, phi coefficients, replicas,
+    workload vector I_q. Shape (..., Q, 8)."""
+    return np.concatenate(
+        [
+            inst["edge_coords"],
+            inst["phi"],
+            inst["replicas"][..., None],
+            inst["workload"],
+        ],
+        axis=-1,
+    )
+
+
+def request_features(inst: Instance) -> np.ndarray:
+    """Paper §IV-A request encoder inputs: source-edge coords + data size.
+    Shape (..., Z, 3)."""
+    src = inst["req_src"]
+    coords = np.take_along_axis(
+        inst["edge_coords"], src[..., None].astype(np.int64), axis=-2
+    )
+    return np.concatenate([coords, inst["req_size"][..., None]], axis=-1)

@@ -1,0 +1,239 @@
+"""CoRaiS matching-on-demand policy network (paper §IV-A, Fig. 6).
+
+Edge encoder (L attention layers) + request encoder (K attention layers)
+align heterogeneous features; the context decoder attends the system context
+[f_hat, h_hat, f_q] over request embeddings; the policy head scores every
+(edge, request) pair with C*tanh compatibilities and softmaxes over edges
+(eqs 12-17). One forward pass yields the full factorized scheduling
+distribution, so S-sample RL (§IV-B) needs exactly one network evaluation.
+
+The encoder sublayer alignment mechanism is pluggable ("mha" | "mlp") to
+realize the paper's FC1/FC2/FC3 ablation baselines with parameter-matched
+MLPs (see core/ablations.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import (
+    batchnorm_apply,
+    batchnorm_init,
+    layernorm_apply,
+    layernorm_init,
+    linear_apply,
+    linear_init,
+    mha_apply,
+    mha_init,
+)
+from repro.nn.module import split_keys, uniform_init
+
+EDGE_FEATURES = 8   # coords(2) + phi coeffs(2) + replicas(1) + workload(3)
+REQ_FEATURES = 3    # source coords(2) + data size(1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    # d_model=256 lands the parameter count at the paper's "about 4 million
+    # learnable parameters" with the stated L=5/K=3/8-head/512-FC layout.
+    d_model: int = 256
+    num_heads: int = 8
+    edge_layers: int = 5        # L (paper: 5)
+    request_layers: int = 3     # K (paper: 3)
+    ff_hidden: int = 512        # FC hidden dim (paper: 512, ReLU)
+    tanh_clip: float = 10.0     # C in eq (16)
+    norm: str = "batch"         # "batch" (paper) | "layer" (ablation knob)
+    edge_align: str = "mha"     # "mha" (CoRaiS) | "mlp" (FC1/FC3)
+    req_align: str = "mha"      # "mha" (CoRaiS) | "mlp" (FC2/FC3)
+    feature_scale: float = 0.1  # static input scaling for workload features
+
+
+# ---------------------------------------------------------------------------
+# feature builders (jnp twins of instances.edge_features/request_features)
+# ---------------------------------------------------------------------------
+
+
+def edge_features(inst) -> jax.Array:
+    return jnp.concatenate(
+        [
+            inst["edge_coords"],
+            inst["phi"],
+            inst["replicas"][..., None],
+            inst["workload"],
+        ],
+        axis=-1,
+    ).astype(jnp.float32)
+
+
+def request_features(inst) -> jax.Array:
+    src = inst["req_src"][..., None].astype(jnp.int32)
+    coords = jnp.take_along_axis(inst["edge_coords"], src, axis=-2)
+    return jnp.concatenate(
+        [coords, inst["req_size"][..., None]], axis=-1
+    ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _align_init(key, cfg: PolicyConfig, kind: str):
+    """Alignment sublayer: MHA (paper) or parameter-matched token-wise MLP.
+
+    MHA holds 4*d^2 weights; the MLP uses d->2d->d (= 4*d^2) to keep the
+    learnable-parameter count matched, as required for FC1/FC2/FC3."""
+    d = cfg.d_model
+    if kind == "mha":
+        return {"mha": mha_init(key, d, cfg.num_heads)}
+    k1, k2 = jax.random.split(key)
+    return {
+        "mlp": {  # bias-free so the count matches MHA's 4*d^2 exactly
+            "l1": linear_init(k1, d, 2 * d, bias=False),
+            "l2": linear_init(k2, 2 * d, d, bias=False),
+        }
+    }
+
+
+def _norm_init(cfg: PolicyConfig):
+    if cfg.norm == "batch":
+        return batchnorm_init(cfg.d_model)
+    return layernorm_init(cfg.d_model), {}
+
+
+def _encoder_init(key, cfg: PolicyConfig, num_layers: int, align: str):
+    layers, states = [], []
+    for k in split_keys(key, num_layers):
+        ka, kf1, kf2 = split_keys(k, 3)
+        n1p, n1s = _norm_init(cfg)
+        n2p, n2s = _norm_init(cfg)
+        layers.append(
+            {
+                "align": _align_init(ka, cfg, align),
+                "norm1": n1p,
+                "fc": {
+                    "l1": linear_init(kf1, cfg.d_model, cfg.ff_hidden),
+                    "l2": linear_init(kf2, cfg.ff_hidden, cfg.d_model),
+                },
+                "norm2": n2p,
+            }
+        )
+        states.append({"norm1": n1s, "norm2": n2s})
+    return layers, states
+
+
+def corais_init(key, cfg: PolicyConfig):
+    keys = split_keys(key, 8)
+    d = cfg.d_model
+    edge_layers, edge_states = _encoder_init(keys[2], cfg, cfg.edge_layers, cfg.edge_align)
+    req_layers, req_states = _encoder_init(keys[3], cfg, cfg.request_layers, cfg.req_align)
+    params = {
+        "edge_proj": linear_init(keys[0], EDGE_FEATURES, d),
+        "req_proj": linear_init(keys[1], REQ_FEATURES, d),
+        "edge_layers": edge_layers,
+        "req_layers": req_layers,
+        # eq (15): queries from [f_hat, h_hat, f_q] (3d), kv from requests
+        "ctx_mha": mha_init(keys[4], 3 * d, cfg.num_heads, kv_dim=d, out_dim=d),
+        "w_px": uniform_init(keys[5], (d, d), fan_in=d),
+        "w_py": uniform_init(keys[6], (d, d), fan_in=d),
+    }
+    state = {"edge_layers": edge_states, "req_layers": req_states}
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def _masked_norm(norm_params, norm_state, x, mask, cfg: PolicyConfig, training: bool):
+    """BatchNorm over valid tokens only (batch x nodes), or LayerNorm."""
+    if cfg.norm == "layer":
+        return layernorm_apply(norm_params, x), norm_state
+    m = mask[..., None].astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(m), 1.0)
+    if training:
+        mean = jnp.sum(x * m, axis=tuple(range(x.ndim - 1))) / cnt
+        var = jnp.sum(jnp.square(x - mean) * m, axis=tuple(range(x.ndim - 1))) / cnt
+        momentum = 0.9
+        new_state = {
+            "mean": momentum * norm_state["mean"] + (1 - momentum) * mean,
+            "var": momentum * norm_state["var"] + (1 - momentum) * var,
+            "count": norm_state["count"] + 1,
+        }
+    else:
+        trained = norm_state["count"] > 0
+        bmean = jnp.sum(x * m, axis=tuple(range(x.ndim - 1))) / cnt
+        bvar = jnp.sum(jnp.square(x - bmean) * m, axis=tuple(range(x.ndim - 1))) / cnt
+        mean = jnp.where(trained, norm_state["mean"], bmean)
+        var = jnp.where(trained, norm_state["var"], bvar)
+        new_state = norm_state
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5)
+    return y * norm_params["scale"] + norm_params["bias"], new_state
+
+
+def _align_apply(layer_align, x, mask, num_heads: int):
+    if "mha" in layer_align:
+        attn_mask = mask[..., None, None, :] & mask[..., None, :, None]
+        return mha_apply(layer_align["mha"], x, mask=attn_mask, num_heads=num_heads)
+    h = jax.nn.relu(linear_apply(layer_align["mlp"]["l1"], x))
+    return linear_apply(layer_align["mlp"]["l2"], h)
+
+
+def _encoder_apply(layers, states, x, mask, cfg: PolicyConfig, training: bool):
+    new_states = []
+    for layer, st in zip(layers, states):
+        a = _align_apply(layer["align"], x, mask, cfg.num_heads)
+        h, st1 = _masked_norm(layer["norm1"], st["norm1"], x + a, mask, cfg, training)
+        f = linear_apply(layer["fc"]["l2"], jax.nn.relu(linear_apply(layer["fc"]["l1"], h)))
+        x, st2 = _masked_norm(layer["norm2"], st["norm2"], h + f, mask, cfg, training)
+        new_states.append({"norm1": st1, "norm2": st2})
+        x = x * mask[..., None]
+    return x, new_states
+
+
+def _masked_max(x, mask):
+    return jnp.max(jnp.where(mask[..., None], x, -jnp.inf), axis=-2)
+
+
+def corais_apply(params, state, inst, cfg: PolicyConfig, *, training: bool = False):
+    """Returns (log_probs, new_state); log_probs: (..., Z, Q) log a_qz."""
+    emask = inst["edge_mask"]
+    rmask = inst["req_mask"]
+
+    ef = edge_features(inst)
+    # Static rescale keeps the heavy workload features in a trainable range.
+    ef = ef * jnp.asarray([1, 1, 1, 1, 1] + [cfg.feature_scale] * 3, jnp.float32)
+    rf = request_features(inst)
+
+    f = linear_apply(params["edge_proj"], ef)
+    h = linear_apply(params["req_proj"], rf)
+    f, est = _encoder_apply(params["edge_layers"], state["edge_layers"], f, emask, cfg, training)
+    h, rst = _encoder_apply(params["req_layers"], state["req_layers"], h, rmask, cfg, training)
+
+    f_hat = _masked_max(f, emask)  # (..., d)
+    h_hat = _masked_max(h, rmask)
+    q_ctx = jnp.concatenate(
+        [
+            jnp.broadcast_to(f_hat[..., None, :], f.shape),
+            jnp.broadcast_to(h_hat[..., None, :], f.shape),
+            f,
+        ],
+        axis=-1,
+    )  # (..., Q, 3d)
+    ctx_mask = rmask[..., None, None, :]  # attend only real requests
+    c = mha_apply(
+        params["ctx_mha"], q_ctx, kv_in=h, mask=ctx_mask, num_heads=cfg.num_heads
+    )  # (..., Q, d)
+
+    px = c @ params["w_px"]
+    py = h @ params["w_py"]
+    u = jnp.einsum("...qd,...zd->...qz", px, py) / math.sqrt(cfg.d_model)
+    imp = cfg.tanh_clip * jnp.tanh(u)  # eq (16)
+    imp = jnp.where(emask[..., :, None], imp, -1e9)
+    log_probs = jax.nn.log_softmax(imp, axis=-2)  # eq (17): softmax over edges
+    log_probs = jnp.swapaxes(log_probs, -1, -2)  # (..., Z, Q)
+    return log_probs, {"edge_layers": est, "req_layers": rst}

@@ -1,0 +1,153 @@
+"""S-sample batch REINFORCE for CoRaiS (paper §IV-B, eqs 20-21).
+
+One forward pass per instance yields the full factorized distribution;
+S assignments are sampled from it, the shared-baseline advantage
+A(pi_s) = L(pi_s) - mean_i L(pi_i) weights the log-prob gradient, and an
+entropy bonus (eq 20) keeps exploration alive. Loss (eq 21):
+
+    L(theta|D) = E_g[ C1 * sum_s log p(pi_s) A(pi_s) - C2 * H(g) ]
+
+Paper hyperparameters: Adam lr 1e-5, batch 128 instances, S = 64,
+C1 = 10, C2 = 0.5, uniform(-1/sqrt d) init.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import instances as inst_lib
+from repro.core.decode import assignment_log_prob, greedy_decode
+from repro.core.objective import makespan
+from repro.core.policy import PolicyConfig, corais_apply, corais_init
+from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class RLConfig:
+    policy: PolicyConfig = PolicyConfig()
+    instance: inst_lib.InstanceConfig = inst_lib.InstanceConfig()
+    batch_size: int = 128
+    num_samples: int = 64          # S
+    c1: float = 10.0
+    c2: float = 0.5
+    lr: float = 1e-5
+    grad_clip: float = 1.0
+    num_batches: int = 40000
+    seed: int = 0
+    log_every: int = 10
+
+
+def rl_loss(params, state, batch, sample_key, cfg: RLConfig):
+    """Surrogate loss over a batch of instances. batch leaves have a leading
+    batch axis; returns (loss, aux)."""
+    log_probs, new_state = corais_apply(
+        params, state, batch, cfg.policy, training=True
+    )  # (B, Z, Q)
+    rmask = batch["req_mask"]
+
+    # --- S samples from the factorized policy (no grad through sampling).
+    lp_stop = jax.lax.stop_gradient(log_probs)
+    keys = jax.random.split(sample_key, cfg.num_samples)
+    samples = jnp.stack(
+        [jax.random.categorical(k, lp_stop, axis=-1) for k in keys], axis=0
+    ).astype(jnp.int32)  # (S, B, Z)
+
+    costs = jax.vmap(lambda a: makespan(batch, a))(samples)  # (S, B)
+    baseline = jnp.mean(costs, axis=0, keepdims=True)
+    adv = costs - baseline  # (S, B)
+
+    logp_pi = jax.vmap(lambda a: assignment_log_prob(log_probs, a, rmask))(samples)
+    reinforce = jnp.sum(logp_pi * jax.lax.stop_gradient(adv), axis=0)  # (B,)
+
+    # --- entropy (eq 20), over real (request, edge) cells
+    probs = jnp.exp(log_probs)
+    ent = -jnp.sum(probs * log_probs, axis=-1)  # (B, Z)
+    ent = jnp.sum(ent * rmask, axis=-1)  # (B,)
+
+    loss = jnp.mean(cfg.c1 * reinforce - cfg.c2 * ent)
+    aux = {
+        "cost_mean": jnp.mean(costs),
+        "cost_best": jnp.mean(jnp.min(costs, axis=0)),
+        "entropy": jnp.mean(ent),
+        "state": new_state,
+    }
+    return loss, aux
+
+
+def make_train_step(cfg: RLConfig, adam_cfg: Optional[AdamConfig] = None):
+    adam_cfg = adam_cfg or AdamConfig(lr=cfg.lr)
+
+    @jax.jit
+    def step(params, state, opt_state, batch, key):
+        (loss, aux), grads = jax.value_and_grad(rl_loss, has_aux=True)(
+            params, state, batch, key, cfg
+        )
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        params, opt_state = adam_update(params, grads, opt_state, adam_cfg)
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "cost_mean": aux["cost_mean"],
+            "cost_best": aux["cost_best"],
+            "entropy": aux["entropy"],
+        }
+        return params, aux["state"], opt_state, metrics
+
+    return step, adam_cfg
+
+
+def greedy_eval(params, state, batch, cfg: RLConfig) -> jax.Array:
+    """Mean greedy makespan on a batch (no sampling)."""
+    log_probs, _ = corais_apply(params, state, batch, cfg.policy, training=False)
+    return jnp.mean(makespan(batch, greedy_decode(log_probs)))
+
+
+def train(
+    cfg: RLConfig,
+    num_batches: Optional[int] = None,
+    params=None,
+    state=None,
+    opt_state=None,
+    callback: Optional[Callable] = None,
+    checkpointer=None,
+    start_batch: int = 0,
+):
+    """Train CoRaiS on freshly generated synthetic instances (paper §IV-B).
+
+    Returns (params, state, opt_state, history). Resumable: pass the pytrees
+    back in (or use ``checkpointer`` for automatic periodic save/restore).
+    """
+    num_batches = num_batches if num_batches is not None else cfg.num_batches
+    rng = np.random.default_rng(cfg.seed + 7919 * start_batch)
+    key = jax.random.PRNGKey(cfg.seed)
+    if params is None:
+        key, sub = jax.random.split(key)
+        params, state = corais_init(sub, cfg.policy)
+    adam_cfg = AdamConfig(lr=cfg.lr)
+    if opt_state is None:
+        opt_state = adam_init(params, adam_cfg)
+    step_fn, _ = make_train_step(cfg, adam_cfg)
+
+    history = []
+    for b in range(start_batch, start_batch + num_batches):
+        batch = inst_lib.generate_batch(rng, cfg.instance, cfg.batch_size)
+        batch = jax.tree.map(jnp.asarray, batch)
+        key, sub = jax.random.split(key)
+        t0 = time.perf_counter()
+        params, state, opt_state, metrics = step_fn(params, state, opt_state, batch, sub)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["batch"] = b
+        metrics["sec"] = time.perf_counter() - t0
+        history.append(metrics)
+        if callback is not None and (b % cfg.log_every == 0):
+            callback(metrics)
+        if checkpointer is not None and checkpointer.should_save(b):
+            checkpointer.save(
+                b, {"params": params, "state": state, "opt_state": opt_state}
+            )
+    return params, state, opt_state, history

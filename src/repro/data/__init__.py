@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    SyntheticTokens,
+    input_specs,
+    make_batch,
+    make_decode_batch,
+)
+
+__all__ = ["SyntheticTokens", "input_specs", "make_batch", "make_decode_batch"]

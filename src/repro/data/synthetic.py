@@ -1,0 +1,116 @@
+"""Synthetic LM data: deterministic token pipeline + dry-run input specs.
+
+``input_specs(cfg, shape)`` is the task-mandated ShapeDtypeStruct factory:
+weak-type-correct stand-ins for every model input of a (arch x shape) cell,
+with NO device allocation. ``make_batch`` builds real (small) numpy batches
+with the same pytree structure for smoke tests and the training example.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.lm import init_cache
+
+
+def _train_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    d = {}
+    if cfg.encoder_decoder:
+        d["embeds"] = ((batch, seq, cfg.d_model), jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+        d["tokens"] = ((batch, seq), jnp.int32)
+    elif not cfg.embed_input:
+        d["embeds"] = ((batch, seq, cfg.d_model), jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+        if cfg.mrope:
+            d["positions"] = ((3, batch, seq), jnp.int32)
+    else:
+        d["tokens"] = ((batch, seq), jnp.int32)
+    d["labels"] = ((batch, seq), jnp.int32)
+    return d
+
+
+def _prefill_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    d = _train_shapes(cfg, batch, seq)
+    d.pop("labels")
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct pytree(s) for one (arch x shape) cell.
+
+    train/prefill -> {"batch": ...}; decode -> {"cache": ..., "batch": ...}.
+    """
+    b, s = shape.global_batch, shape.seq_len
+
+    def sds(d):
+        return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt) in d.items()}
+
+    if shape.kind == "train":
+        return {"batch": sds(_train_shapes(cfg, b, s))}
+    if shape.kind == "prefill":
+        return {"batch": sds(_prefill_shapes(cfg, b, s))}
+    # decode: a cache filled to seq_len, one new token per sequence
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    batch = {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    if cfg.mrope:
+        batch["positions"] = jax.ShapeDtypeStruct((3, b), jnp.int32)
+    return {"cache": cache, "batch": batch}
+
+
+def make_batch(rng: np.random.Generator, cfg: ModelConfig, batch: int, seq: int,
+               kind: str = "train") -> dict:
+    """Real numpy batch with the same structure as input_specs' train/prefill."""
+    shapes = _train_shapes(cfg, batch, seq) if kind == "train" else _prefill_shapes(cfg, batch, seq)
+    out = {}
+    for k, (sh, dt) in shapes.items():
+        if k in ("tokens",):
+            out[k] = rng.integers(0, cfg.vocab_size, size=sh).astype(np.int32)
+        elif k == "labels":
+            out[k] = rng.integers(0, cfg.vocab_size, size=sh).astype(np.int32)
+        elif k == "positions":
+            pos = np.broadcast_to(np.arange(sh[-1], dtype=np.int32), sh).copy()
+            out[k] = pos
+        else:  # embeds
+            out[k] = (0.02 * rng.standard_normal(size=sh)).astype(np.float32)
+    return out
+
+
+def make_decode_batch(rng: np.random.Generator, cfg: ModelConfig, batch: int) -> dict:
+    out = {"token": rng.integers(0, cfg.vocab_size, size=(batch,)).astype(np.int32)}
+    if cfg.mrope:
+        out["positions"] = np.zeros((3, batch), np.int32)
+    return out
+
+
+@dataclasses.dataclass
+class SyntheticTokens:
+    """Deterministic, checkpointable synthetic token stream.
+
+    Sequences are Zipf-ish draws seeded by (seed, step) so a restored
+    pipeline resumes exactly where it left off (fault-tolerant training)."""
+
+    vocab_size: int
+    batch: int
+    seq: int
+    seed: int = 0
+    step: int = 0
+
+    def state_dict(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.seed = int(d["seed"])
+        self.step = int(d["step"])
+
+    def __next__(self) -> dict:
+        rng = np.random.default_rng((self.seed, self.step))
+        self.step += 1
+        z = rng.zipf(1.3, size=(self.batch, self.seq + 1))
+        toks = (z % self.vocab_size).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self):
+        return self

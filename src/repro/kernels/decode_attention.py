@@ -1,0 +1,93 @@
+"""Pallas TPU GQA flash-decode kernel.
+
+One query token per sequence attends to a (possibly rolling) KV cache.
+Grid (B, KV, nw): the cache-window axis is innermost; online-softmax
+accumulators for all G query heads of one kv head live in VMEM scratch.
+Slot validity (absolute position per slot, sliding window) is evaluated
+in-kernel from the slot_pos block, so rolling caches need no host-side
+re-packing. This is the TPU-idiomatic analogue of split-K paged attention
+(DESIGN.md §4): on the production mesh the cache's window axis is sharded
+over `model`, and the per-shard partial softmax combines via psum.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, window, bk: int, nw: int, G: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    slots = sp_ref[0]                            # (bk,) absolute positions
+    pos = pos_ref[0]                             # scalar
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (G, bk)
+    valid = (slots >= 0) & (slots <= pos)
+    if window is not None:
+        valid &= slots > pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == nw - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, slot_pos, pos, *, window=None,
+                         bk: int = 128, interpret: bool = False):
+    """q: (B, H, hd); k/v_cache: (B, W, KV, hd); slot_pos: (B, W) int32;
+    pos: (B,) int32 -> (B, H, hd)."""
+    B, W, KV, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // KV
+    bk = min(bk, W)
+    assert W % bk == 0, (W, bk)
+    nw = W // bk
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               bk=bk, nw=nw, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nw),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),                    # pos
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),   # q
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, j: (b, j, h, 0)),  # k
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, j: (b, j, h, 0)),  # v
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),               # slot_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, qg, k_cache, v_cache, slot_pos)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,84 @@
+"""Pallas TPU chunked selective-scan kernel (mamba-1).
+
+TPU adaptation of the fused CUDA selective scan (DESIGN.md §4): grid
+(B, nd, nc) where nd blocks d_inner and the chunk axis nc is innermost and
+sequential; the (bd, N) hidden state is carried across chunks in VMEM
+scratch, and each chunk's discretized (c, bd, N) tensors exist only as
+VMEM-resident temporaries inside the kernel. The time loop inside a chunk
+is a lax.fori_loop over VPU elementwise ops — mamba is memory-bound, and
+this layout streams u/dt/B/C exactly once from HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, h_ref, *,
+            chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...]  # (bd, N)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :]          # (bd,)
+        u_t = u_ref[0, t, :]
+        b_t = b_ref[0, t, :]            # (N,)
+        c_t = c_ref[0, t, :]
+        da = jnp.exp(dt_t[:, None] * a)             # (bd, N)
+        dbu = (dt_t * u_t)[:, None] * b_t[None, :]  # (bd, N)
+        h = da * h + dbu
+        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def mamba_scan_fwd(u, dt, B_mat, C_mat, A, *, chunk: int = 128,
+                   bd: int = 256, interpret: bool = False):
+    """u, dt: (B, S, d) f32; B_mat, C_mat: (B, S, N) f32; A: (d, N) f32.
+    Returns (y (B, S, d) f32, h_last (B, d, N) f32)."""
+    b, s, d = u.shape
+    n = A.shape[-1]
+    chunk = min(chunk, s)
+    bd = min(bd, d)
+    assert s % chunk == 0 and d % bd == 0, (s, chunk, d, bd)
+    nc = s // chunk
+    nd = d // bd
+
+    kernel = functools.partial(_kernel, chunk=chunk, nc=nc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda bi, di, ci: (bi, ci, di)),  # u
+            pl.BlockSpec((1, chunk, bd), lambda bi, di, ci: (bi, ci, di)),  # dt
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),    # B
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),    # C
+            pl.BlockSpec((bd, n), lambda bi, di, ci: (di, 0)),              # A
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, bd, n), lambda bi, di, ci: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, B_mat, C_mat, A)
+    return y, h_last

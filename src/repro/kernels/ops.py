@@ -1,0 +1,51 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``INTERPRET`` defaults to True off-TPU: the kernel bodies execute in Python
+(emulation) for correctness validation on CPU, and compile to Mosaic on a
+real TPU. The pure-jnp oracles live in ref.py; tests sweep shapes/dtypes and
+assert allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.mamba_scan import mamba_scan_fwd
+from repro.kernels.policy_score import policy_score_fwd
+
+def interpret_mode() -> bool:
+    """Lazy: avoids initializing the jax backend at import time (the dry-run
+    must set XLA_FLAGS before anything touches jax device state)."""
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=interpret_mode())
+
+
+@partial(jax.jit, static_argnames=("window", "bk"))
+def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window=None, bk=128):
+    return decode_attention_fwd(q, k_cache, v_cache, slot_pos, pos,
+                                window=window, bk=bk, interpret=interpret_mode())
+
+
+@partial(jax.jit, static_argnames=("chunk", "bd"))
+def mamba_scan(u, dt, B_mat, C_mat, A, *, chunk=128, bd=256):
+    return mamba_scan_fwd(u, dt, B_mat, C_mat, A, chunk=chunk, bd=bd,
+                          interpret=interpret_mode())
+
+
+@partial(jax.jit, static_argnames=("tanh_clip", "bz"))
+def policy_score(c_emb, h_emb, w_px, w_py, edge_mask, *, tanh_clip=10.0, bz=256):
+    return policy_score_fwd(c_emb, h_emb, w_px, w_py, edge_mask,
+                            tanh_clip=tanh_clip, bz=bz, interpret=interpret_mode())
+
+
+__all__ = ["flash_attention", "decode_attention", "mamba_scan",
+           "policy_score", "ref", "interpret_mode"]

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bmkd->bkgqm", qg, k.astype(jnp.float32)) / math.sqrt(hd)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqm,bmkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, slot_pos, pos, *, window=None):
+    """q: (B, H, hd); k/v_cache: (B, W, KV, hd); slot_pos: (B, W); pos: (B,)."""
+    B, W, KV, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bmkd->bkgm", qg, k_cache.astype(jnp.float32)) / math.sqrt(hd)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window is not None:
+        valid &= slot_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgm,bmkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def mamba_scan_ref(u, dt, B_mat, C_mat, A, h0=None):
+    """u, dt: (B, S, d); B_mat, C_mat: (B, S, N); A: (d, N).
+    Returns (y (B, S, d) f32, h_last (B, d, N) f32)."""
+    b, s, d = u.shape
+    n = A.shape[-1]
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)          # (B,S,d,N)
+    dBu = (dt[..., None] * B_mat[:, :, None, :] * u[..., None]).astype(jnp.float32)
+
+    def step(h, xs):
+        da_t, dbu_t, c_t = xs
+        h = da_t * h + dbu_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h = jnp.zeros((b, d, n), jnp.float32) if h0 is None else h0
+    h_last, ys = jax.lax.scan(
+        step, h,
+        (dA.swapaxes(0, 1), dBu.swapaxes(0, 1),
+         C_mat.astype(jnp.float32).swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h_last
+
+
+def policy_score_ref(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip=10.0):
+    """Fused CoRaiS policy head (paper eqs 16-17).
+
+    c_emb: (Q, d) context-decoder edge embeddings; h_emb: (Z, d) request
+    embeddings; returns log a_qz transposed to (Z, Q)."""
+    d = c_emb.shape[-1]
+    px = c_emb.astype(jnp.float32) @ w_px.astype(jnp.float32)
+    py = h_emb.astype(jnp.float32) @ w_py.astype(jnp.float32)
+    u = (py @ px.T) / math.sqrt(d)  # (Z, Q)
+    imp = tanh_clip * jnp.tanh(u)
+    imp = jnp.where(edge_mask[None, :], imp, -1e9)
+    return jax.nn.log_softmax(imp, axis=-1)

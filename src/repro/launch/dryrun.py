@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (task spec MULTI-POD DRY-RUN).
+
+For every (architecture x input-shape x mesh) cell: build the sharded step,
+``.lower(**ShapeDtypeStructs)``, ``.compile()``, print memory/cost analysis,
+parse the collective schedule, and append a CellReport to the results JSON.
+
+The XLA_FLAGS line above MUST stay the first statement — jax locks the
+device count at first init. Never import this module from test/bench code
+that needs the real single-device view; run it as a subprocess
+(``python -m repro.launch.dryrun ...``).
+
+Usage:
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import TrainKnobs, build_for_shape, lowering_inputs
+from repro.roofline.analysis import analyze_compiled
+
+
+# §Perf hillclimb variants (EXPERIMENTS.md): composable with "+", e.g.
+# --variant "flashdecode+ssm-bf16". Model-config overrides:
+CFG_VARIANTS = {
+    "flashdecode": {"decode_flash_shardmap": True},
+    "ssm-bf16": {"ssm_scan_dtype": "bfloat16"},
+    "ssm-chunk32": {"ssm_chunk": 32},
+    "ssm-chunk64": {"ssm_chunk": 64},
+    "ssm-chunk128": {"ssm_chunk": 128},
+    "ssm-chunk1024": {"ssm_chunk": 1024},
+    "ssm-chunk4096": {"ssm_chunk": 4096},
+    "remat-dots": {"remat": "dots"},
+    "remat-none": {"remat": "none"},
+    "mb1": {"num_microbatches": 1},
+    "mb2": {"num_microbatches": 2},
+    "mb4": {"num_microbatches": 4},
+    "mb16": {"num_microbatches": 16},
+    "dp-layout": {"layout": "dp"},
+    "tpserve": {"layout": "tp-serve"},
+    "densemoe": {"moe_dense_decode": True},
+    "seqshard": {"seq_shard_activations": True},
+    "noseqshard": {"seq_shard_activations": False},
+    "adam": {"optimizer": "adam"},
+    "adafactor": {"optimizer": "adafactor"},
+}
+# Execution-knob overrides:
+KNOB_VARIANTS = {
+    "accum-bf16": {"grad_accum_dtype": "bfloat16"},
+}
+
+
+def apply_variant(cfg, knobs: TrainKnobs, variant: str):
+    if variant in ("", "baseline"):
+        return cfg, knobs
+    for part in variant.split("+"):
+        if part in CFG_VARIANTS:
+            cfg = dataclasses.replace(cfg, **CFG_VARIANTS[part])
+        elif part in KNOB_VARIANTS:
+            knobs = dataclasses.replace(knobs, **KNOB_VARIANTS[part])
+        else:
+            raise KeyError(f"unknown variant component {part!r}; known: "
+                           f"{sorted(CFG_VARIANTS) + sorted(KNOB_VARIANTS)}")
+    return cfg, knobs
+
+
+def probe_config(cfg, shape, n_layers: int):
+    """Unrolled shallow twin of ``cfg`` for exact cost accounting.
+
+    XLA's HloCostAnalysis counts while-loop bodies once, so the full scanned
+    program under-reports FLOPs/bytes/collectives. The probe unrolls every
+    loop (layers, microbatches, attention blocks, ssm chunks) at 1 and 2
+    layers; per-layer deltas extrapolate to the real depth. Attention probe
+    chunks are coarsened to keep the unroll small — a <10% SWA-span
+    overcount, noted in EXPERIMENTS.md §Roofline.
+    """
+    s = shape.seq_len if shape.kind != "decode" else 1
+    attn_chunk = max(512, s // 8)
+    if cfg.sliding_window:
+        attn_chunk = min(attn_chunk, max(cfg.sliding_window, 512))
+    attn_chunk = min(attn_chunk, max(s, 1))
+    # respect explicitly-reduced ssm chunks (the ssm-chunk* variants);
+    # otherwise coarsen so the probe unroll stays small
+    ssm_chunk = min(max(256, s // 4), max(s, 1))
+    if cfg.ssm_chunk < ssm_chunk:
+        ssm_chunk = min(cfg.ssm_chunk, max(s, 1))
+    repl = dict(
+        num_layers=n_layers,
+        scan_layers=False,
+        attn_unroll=True,
+        attn_chunk=attn_chunk,
+        ssm_unroll=True,
+        ssm_chunk=ssm_chunk,
+    )
+    if cfg.encoder_decoder:
+        repl["num_encoder_layers"] = n_layers
+    return dataclasses.replace(cfg, **repl)
+
+
+def _probe_one(cfg, shape, mesh, knobs):
+    from repro.roofline.hlo_parse import collective_wire_bytes
+
+    with mesh:
+        step, _, _ = build_for_shape(cfg, mesh, shape, knobs)
+        args = lowering_inputs(cfg, shape, knobs)
+        compiled = step.lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    wire = collective_wire_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(wire.get("_total", 0.0)))
+
+
+def _probe_costs(cfg, shape, mesh, knobs):
+    """(flops, bytes, wire) per device corrected for loop trip counts.
+
+    Bilinear model cost(L, m) = a + b*L + c*m + d*L*m over unrolled probes
+    at (L, m) in {1,2}^2 — weight-gather traffic scales with L*m (FSDP
+    re-gathers per layer per microbatch), so the cross term is real.
+    """
+    pknobs = dataclasses.replace(knobs, unroll_microbatches=True)
+    L = cfg.num_layers
+    M = max(cfg.num_microbatches, 1)
+    if M == 1 or shape.kind != "train":
+        vals = [_probe_one(dataclasses.replace(probe_config(cfg, shape, n),
+                                               num_microbatches=1),
+                           shape, mesh, pknobs) for n in (1, 2)]
+        (f1, b1, w1), (f2, b2, w2) = vals
+        return (f1 + (L - 1) * max(f2 - f1, 0.0),
+                b1 + (L - 1) * max(b2 - b1, 0.0),
+                w1 + (L - 1) * max(w2 - w1, 0.0))
+    grid = {}
+    for n in (1, 2):
+        for mm in (1, 2):
+            pcfg = dataclasses.replace(probe_config(cfg, shape, n),
+                                       num_microbatches=mm)
+            grid[(n, mm)] = _probe_one(pcfg, shape, mesh, pknobs)
+
+    def extrapolate(i):
+        c11, c12 = grid[(1, 1)][i], grid[(1, 2)][i]
+        c21, c22 = grid[(2, 1)][i], grid[(2, 2)][i]
+        d = c22 - c21 - c12 + c11
+        b = c21 - c11 - d
+        c = c12 - c11 - d
+        a = c11 - b - c - d
+        return max(a + b * L + c * M + d * L * M, 0.0)
+
+    return extrapolate(0), extrapolate(1), extrapolate(2)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             knobs: TrainKnobs = TrainKnobs(), variant: str = "baseline",
+             verbose: bool = True, probe: bool = True,
+             cfg_override=None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    cfg, knobs = apply_variant(cfg, knobs, variant)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why, "variant": variant}
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = 512 if multi else 256
+    t0 = time.time()
+    with mesh:
+        step, _, _ = build_for_shape(cfg, mesh, shape, knobs)
+        args = lowering_inputs(cfg, shape, knobs)
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    report = analyze_compiled(compiled, cfg, shape, mesh_name, chips,
+                              args[0], t_compile, variant)
+    raw = (report.hlo_flops_per_device, report.hlo_bytes_per_device,
+           report.wire_bytes_per_device)
+    # Roofline accounting (single-pod only per task spec): correct the
+    # loop-body undercount with unrolled probes.
+    if probe and mesh_name == "single":
+        f, b, w = _probe_costs(cfg, shape, mesh, knobs)
+        report.hlo_flops_per_device = f
+        report.hlo_bytes_per_device = b
+        report.wire_bytes_per_device = w
+    out = report.to_json()
+    out["status"] = "ok"
+    out["lower_seconds"] = t_lower
+    out["raw_scan_counted"] = {"flops": raw[0], "bytes": raw[1], "wire": raw[2]}
+    ma = compiled.memory_analysis()
+    out["memory_analysis"] = {
+        "argument_size_in_bytes": int(ma.argument_size_in_bytes),
+        "output_size_in_bytes": int(ma.output_size_in_bytes),
+        "temp_size_in_bytes": int(ma.temp_size_in_bytes),
+        "alias_size_in_bytes": int(ma.alias_size_in_bytes),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_name} [{variant}] ==")
+        print("memory_analysis:", out["memory_analysis"])
+        t = out["terms"]
+        print(f"flops/dev={out['hlo_flops_per_device']:.3e} "
+              f"bytes/dev={out['hlo_bytes_per_device']:.3e} "
+              f"wire/dev={out['wire_bytes_per_device']:.3e}")
+        print(f"terms: compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+              f"collective={t['collective_s']:.4f}s dominant={t['dominant']} "
+              f"useful_ratio={t['useful_flop_ratio']:.3f}")
+        print(f"collectives: {out['collective_ops']}  "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
+    ap.add_argument("--out", default=None, help="append JSON results here")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--grad-accum-dtype", default="float32")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells already present (ok/skipped) in --out")
+    args = ap.parse_args()
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    knobs = TrainKnobs(grad_accum_dtype=args.grad_accum_dtype, lr=args.lr)
+    results, failures = [], 0
+
+    def flush():
+        if not args.out:
+            return
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        # replace any prior entry for the same (arch, shape, mesh, variant)
+        done = {(r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+                for r in results}
+        existing = [r for r in existing
+                    if (r["arch"], r["shape"], r["mesh"],
+                        r.get("variant", "baseline")) not in done]
+        existing.extend(results)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out + ".tmp", "w") as f:
+            json.dump(existing, f, indent=1)
+        os.replace(args.out + ".tmp", args.out)
+
+    already = set()
+    if args.skip_existing and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for r in json.load(f):
+                if r["status"] in ("ok", "skipped"):
+                    already.add((r["arch"], r["shape"], r["mesh"],
+                                 r.get("variant", "baseline")))
+    for arch, shape in cells:
+        for mesh_name in meshes:
+            if (arch, shape, mesh_name, args.variant) in already:
+                continue
+            try:
+                results.append(run_cell(arch, shape, mesh_name, knobs,
+                                        variant=args.variant))
+            except Exception as e:  # a failed cell is a bug; record + continue
+                failures += 1
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape, "mesh": mesh_name,
+                                "status": "failed", "error": repr(e),
+                                "variant": args.variant})
+            flush()  # incremental: partial progress survives interruption
+    if args.out:
+        print(f"wrote {len(results)} cell results -> {args.out}")
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    print(f"dryrun: {n_ok} ok, {n_skip} skipped (documented), {failures} FAILED")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Sharded step builders: train_step / prefill / decode_step per (arch, mesh).
+
+These are the single source of truth for how a cell is executed: optimizer
+choice, microbatching (grad accumulation), gradient clipping, activation
+sharding context, and in/out shardings. The dry-run, the real trainer and
+the serving runtime all build their jitted functions here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.synthetic import input_specs
+from repro.models import lm
+from repro.optim import (
+    AdafactorConfig,
+    AdamConfig,
+    adafactor_init,
+    adafactor_update,
+    adam_init,
+    adam_update,
+    clip_by_global_norm,
+)
+from repro.sharding import specs as S
+from repro.sharding.ctx import ShardCtx, use_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainKnobs:
+    """Execution knobs independent of the architecture definition."""
+    grad_clip: float = 1.0
+    lr: float = 3e-4
+    grad_accum_dtype: str = "float32"   # "bfloat16" = compressed accumulation
+    donate: bool = True
+    # statically unroll the grad-accumulation loop (dry-run cost probes:
+    # HloCostAnalysis counts a scanned microbatch body once)
+    unroll_microbatches: bool = False
+
+
+def _dp_groups(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """MoE dispatch groups. One group per data shard keeps dispatch local,
+    but below ~64 tokens/group the (MXU-aligned) capacity floor pads the
+    expert GEMMs several-fold — there, a single global group (one small
+    token all-gather) is cheaper. Decode cells take the g=1 path."""
+    ax = S.mesh_axes(mesh, cfg.layout)
+    dp = S._axsize(mesh, ax["dp"])
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+    if shape.global_batch % dp == 0 and tokens % dp == 0 and tokens // dp >= 64:
+        return dp
+    return 1
+
+
+def _shard_ctx(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig) -> ShardCtx:
+    ax = S.mesh_axes(mesh, cfg.layout)
+    dp_size = S._axsize(mesh, ax["dp"])
+    return ShardCtx(
+        mesh=mesh,
+        dp_axes=ax["dp"],
+        tp_axis=ax["tp"],
+        fsdp_axis=ax["fsdp"],
+        seq_shard=cfg.seq_shard_activations and ax["tp"] is not None,
+        batch_divisible=shape.global_batch % dp_size == 0,
+    )
+
+
+def make_optimizer(cfg: ModelConfig, knobs: TrainKnobs):
+    if cfg.optimizer == "adafactor":
+        ocfg = AdafactorConfig(lr=knobs.lr)
+        return ocfg, partial(adafactor_init, cfg=ocfg), partial(adafactor_update, cfg=ocfg)
+    ocfg = AdamConfig(lr=knobs.lr)
+    return ocfg, partial(adam_init, cfg=ocfg), partial(adam_update, cfg=ocfg)
+
+
+def param_and_opt_shapes(cfg: ModelConfig, knobs: TrainKnobs):
+    """abstract (no-allocation) param/opt trees for lowering."""
+    params = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    _, opt_init, _ = make_optimizer(cfg, knobs)
+    opt = jax.eval_shape(lambda: opt_init(params))
+    return params, opt
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     knobs: TrainKnobs = TrainKnobs()):
+    """Returns (jitted_step, in_specs, out_specs). step(params, opt, batch)
+    -> (params, opt, metrics)."""
+    _, opt_init, opt_update = make_optimizer(cfg, knobs)
+    dp_groups = _dp_groups(mesh, cfg, shape)
+    ctx = _shard_ctx(mesh, cfg, shape)
+    accum_dtype = jnp.dtype(knobs.grad_accum_dtype)
+    m = max(cfg.num_microbatches, 1)
+
+    def loss_fn(params, batch):
+        total, metrics = lm.train_loss(params, batch, cfg, dp_groups)
+        return total, metrics
+
+    def step(params, opt_state, batch):
+        with use_sharding(ctx):
+            if m == 1:
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch)
+            else:
+                def split(x):
+                    return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+                # M-RoPE positions carry a leading (3,) axis; split on batch
+                mbatches = {k: split(v) for k, v in batch.items()
+                            if k != "positions"}
+                if "positions" in batch:
+                    p = batch["positions"]
+                    mbatches["positions"] = p.reshape(
+                        (3, m, p.shape[1] // m) + p.shape[2:]).swapaxes(0, 1)
+
+                def micro(acc, mb):
+                    (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                    g = jax.tree.map(lambda a, b: a + b.astype(accum_dtype), acc[0], g)
+                    return (g, acc[1] + l), met
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, accum_dtype), params)
+                if knobs.unroll_microbatches:
+                    acc, mets_list = (zeros, 0.0), []
+                    for i in range(m):
+                        acc, met = micro(acc, jax.tree.map(lambda x, i=i: x[i],
+                                                           mbatches))
+                        mets_list.append(met)
+                    grads, loss_sum = acc
+                    mets = jax.tree.map(lambda *xs: jnp.stack(xs), *mets_list)
+                else:
+                    (grads, loss_sum), mets = jax.lax.scan(
+                        micro, (zeros, 0.0), mbatches)
+                grads = jax.tree.map(lambda g: (g / m).astype(jnp.float32), grads)
+                loss = loss_sum / m
+                metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), mets)
+            grads, gnorm = clip_by_global_norm(grads, knobs.grad_clip)
+            new_params, new_opt = opt_update(params=params, grads=grads,
+                                             opt_state=opt_state)
+            metrics = dict(metrics)
+            metrics["grad_norm"] = gnorm
+            metrics["loss_total"] = loss
+            return new_params, new_opt, metrics
+
+    # shardings
+    params_shapes, opt_shapes = param_and_opt_shapes(cfg, knobs)
+    pspecs = S.param_specs(params_shapes, cfg, mesh)
+    ospecs = S.opt_state_specs(opt_shapes, pspecs, cfg, mesh)
+    bshapes = input_specs(cfg, shape)["batch"]
+    bspecs = S.batch_specs(bshapes, cfg, shape, mesh)
+    mspec = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                         {"grad_norm": 0, "loss": 0, "aux_loss": 0,
+                          "tokens": 0, "loss_total": 0})
+    jitted = jax.jit(
+        step,
+        in_shardings=(pspecs, ospecs, bspecs),
+        out_shardings=(pspecs, ospecs, mspec),
+        donate_argnums=(0, 1) if knobs.donate else (),
+    )
+    return jitted, (pspecs, ospecs, bspecs), (pspecs, ospecs, mspec)
+
+
+def build_prefill(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                  knobs: TrainKnobs = TrainKnobs()):
+    dp_groups = _dp_groups(mesh, cfg, shape)
+    ctx = _shard_ctx(mesh, cfg, shape)
+
+    def step(params, batch):
+        with use_sharding(ctx):
+            return lm.prefill(params, batch, cfg, dp_groups,
+                              max_seq=shape.seq_len)
+
+    params_shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = S.param_specs(params_shapes, cfg, mesh)
+    bshapes = input_specs(cfg, shape)["batch"]
+    bspecs = S.batch_specs(bshapes, cfg, shape, mesh)
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = S.cache_specs(cache_shapes, cfg, shape, mesh)
+    ax = S.mesh_axes(mesh, cfg.layout)
+    dp = ctx.dp
+    lspec = NamedSharding(mesh, P(dp, ax["tp"]))
+    jitted = jax.jit(step, in_shardings=(pspecs, bspecs),
+                     out_shardings=(cspecs, lspec))
+    return jitted, (pspecs, bspecs), (cspecs, lspec)
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                      knobs: TrainKnobs = TrainKnobs()):
+    dp_groups = _dp_groups(mesh, cfg, shape)
+    ctx = _shard_ctx(mesh, cfg, shape)
+
+    def step(params, cache, batch):
+        with use_sharding(ctx):
+            return lm.decode_step(params, cache, batch, cfg, dp_groups)
+
+    params_shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = S.param_specs(params_shapes, cfg, mesh)
+    specs_all = input_specs(cfg, shape)
+    cspecs = S.cache_specs(specs_all["cache"], cfg, shape, mesh)
+    bspecs = S.batch_specs(specs_all["batch"], cfg, shape, mesh)
+    ax = S.mesh_axes(mesh, cfg.layout)
+    lspec = NamedSharding(mesh, P(ctx.dp, ax["tp"]))
+    jitted = jax.jit(step, in_shardings=(pspecs, cspecs, bspecs),
+                     out_shardings=(cspecs, lspec),
+                     donate_argnums=(1,) if knobs.donate else ())
+    return jitted, (pspecs, cspecs, bspecs), (cspecs, lspec)
+
+
+def build_for_shape(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                    knobs: TrainKnobs = TrainKnobs()):
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, knobs)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, mesh, shape, knobs)
+    return build_decode_step(cfg, mesh, shape, knobs)
+
+
+def lowering_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                    knobs: TrainKnobs = TrainKnobs()):
+    """ShapeDtypeStruct argument tuple for .lower() per shape kind."""
+    params_shapes, opt_shapes = param_and_opt_shapes(cfg, knobs)
+    io = input_specs(cfg, shape)
+    if shape.kind == "train":
+        return (params_shapes, opt_shapes, io["batch"])
+    if shape.kind == "prefill":
+        return (params_shapes, io["batch"])
+    return (params_shapes, io["cache"], io["batch"])

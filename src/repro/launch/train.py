@@ -1,0 +1,166 @@
+"""Training driver: CoRaiS RL (the paper's training, §IV-B) or LM pretrain.
+
+Both paths share the substrate: checkpointing (async, atomic, keep-K),
+preemption-safe resume (data-pipeline state rides in checkpoint extras),
+gradient clipping, and the sharded step builders.
+
+    python -m repro.launch.train corais --batches 200 --ckpt /tmp/corais
+    python -m repro.launch.train lm --arch olmo-1b --steps 50 --scale reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.core.instances import InstanceConfig
+from repro.core.policy import PolicyConfig
+from repro.core.train import RLConfig, train as rl_train
+from repro.data.synthetic import SyntheticTokens
+from repro.models import lm
+from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
+
+
+def train_corais(args) -> None:
+    cfg = RLConfig(
+        policy=PolicyConfig(d_model=args.policy_dim),
+        instance=InstanceConfig(num_edges=args.edges, num_requests=args.requests,
+                                backlog_high=args.backlog),
+        batch_size=args.batch_size,
+        num_samples=args.samples,
+        lr=args.lr,
+        num_batches=args.batches,
+        seed=args.seed,
+    )
+    ckpt = Checkpointer(args.ckpt, every=args.ckpt_every) if args.ckpt else None
+    params = state = opt_state = None
+    start = 0
+    if ckpt is not None:
+        from repro.core.policy import corais_init
+        from repro.optim import adam_init as ainit
+        template = jax.eval_shape(
+            lambda: corais_init(jax.random.PRNGKey(cfg.seed), cfg.policy))
+        opt_template = jax.eval_shape(
+            lambda: ainit(template[0], AdamConfig(lr=cfg.lr)))
+        restored = ckpt.restore_latest(
+            {"params": template[0], "state": template[1],
+             "opt_state": opt_template})
+        if restored:
+            start = restored["step"] + 1
+            params = restored["tree"]["params"]
+            state = restored["tree"]["state"]
+            opt_state = restored["tree"]["opt_state"]
+            print(f"resumed from batch {restored['step']}")
+
+    def log(m):
+        print(f"batch {m['batch']:5d} loss {m['loss']:+9.3f} "
+              f"cost_mean {m['cost_mean']:7.3f} cost_best {m['cost_best']:7.3f} "
+              f"H {m['entropy']:7.2f} ({m['sec']*1e3:6.1f} ms)")
+
+    params, state, opt_state, hist = rl_train(
+        cfg, params=params, state=state, opt_state=opt_state,
+        callback=log, checkpointer=ckpt, start_batch=start)
+    if ckpt is not None:
+        ckpt.save(start + cfg.num_batches,
+                  {"params": params, "state": state, "opt_state": opt_state})
+        ckpt.wait()
+    print("final cost_mean:", hist[-1]["cost_mean"])
+
+
+def train_lm(args) -> None:
+    from repro.configs import get_config, get_reduced_config
+
+    cfg = get_reduced_config(args.arch) if args.scale == "reduced" \
+        else get_config(args.arch)
+    if cfg.encoder_decoder or not cfg.embed_input:
+        raise SystemExit(f"{args.arch}: synthetic token pretrain applies to "
+                         "token-input decoder archs; pick a dense/moe/ssm arch")
+    adam = AdamConfig(lr=args.lr)
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(key, cfg)
+    opt_state = adam_init(params, adam)
+    pipe = SyntheticTokens(cfg.vocab_size, args.batch_size, args.seq, seed=args.seed)
+    ckpt = Checkpointer(args.ckpt, every=args.ckpt_every) if args.ckpt else None
+    start = 0
+    if ckpt is not None:
+        restored = ckpt.restore_latest(
+            {"params": jax.eval_shape(lambda: lm.init_params(key, cfg)),
+             "opt_state": jax.eval_shape(lambda: adam_init(
+                 jax.eval_shape(lambda: lm.init_params(key, cfg)), adam))})
+        if restored:
+            start = restored["step"]
+            params = restored["tree"]["params"]
+            opt_state = restored["tree"]["opt_state"]
+            pipe.load_state_dict(restored["extras"]["pipeline"])
+            print(f"resumed from step {start}")
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm.train_loss(p, batch, cfg, 1), has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adam_update(params, grads, opt_state, adam)
+        return params, opt_state, loss, gnorm
+
+    losses = []
+    for i in range(start, start + args.steps):
+        batch = jax.tree.map(jnp.asarray, next(pipe))
+        t0 = time.perf_counter()
+        params, opt_state, loss, gnorm = step(params, opt_state, batch)
+        loss = float(loss)
+        losses.append(loss)
+        if i % args.log_every == 0:
+            print(f"step {i:5d} loss {loss:8.4f} gnorm {float(gnorm):8.2f} "
+                  f"({(time.perf_counter()-t0)*1e3:7.1f} ms)")
+        if ckpt is not None and ckpt.should_save(i):
+            ckpt.save(i, {"params": params, "opt_state": opt_state},
+                      extras={"pipeline": pipe.state_dict()})
+    if ckpt is not None:
+        ckpt.wait()
+    first = np.mean(losses[:5]) if len(losses) >= 5 else losses[0]
+    last = np.mean(losses[-5:])
+    print(f"loss {first:.4f} -> {last:.4f} over {len(losses)} steps")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    c = sub.add_parser("corais")
+    c.add_argument("--edges", type=int, default=5)
+    c.add_argument("--requests", type=int, default=50)
+    c.add_argument("--backlog", type=int, default=100)
+    c.add_argument("--batch-size", type=int, default=128)
+    c.add_argument("--samples", type=int, default=64)
+    c.add_argument("--batches", type=int, default=40000)
+    c.add_argument("--lr", type=float, default=1e-5)
+    c.add_argument("--policy-dim", type=int, default=256)
+    c.add_argument("--seed", type=int, default=0)
+    c.add_argument("--ckpt", default=None)
+    c.add_argument("--ckpt-every", type=int, default=100)
+
+    l = sub.add_parser("lm")
+    l.add_argument("--arch", required=True)
+    l.add_argument("--scale", choices=("reduced", "full"), default="reduced")
+    l.add_argument("--steps", type=int, default=100)
+    l.add_argument("--batch-size", type=int, default=8)
+    l.add_argument("--seq", type=int, default=128)
+    l.add_argument("--lr", type=float, default=3e-4)
+    l.add_argument("--seed", type=int, default=0)
+    l.add_argument("--ckpt", default=None)
+    l.add_argument("--ckpt-every", type=int, default=50)
+    l.add_argument("--log-every", type=int, default=10)
+
+    args = ap.parse_args()
+    if args.mode == "corais":
+        train_corais(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""LM model zoo: one unified interface over the 10 assigned architectures."""
+from repro.models.lm import (
+    decode_step,
+    init_cache,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+__all__ = ["init_params", "train_loss", "prefill", "decode_step", "init_cache"]

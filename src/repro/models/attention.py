@@ -1,0 +1,333 @@
+"""Memory-bounded attention in pure JAX (the jit / dry-run execution path).
+
+Causal attention uses a *pair-scan flash* formulation: one lax.scan over the
+static list of (q-chunk, kv-chunk) blocks of the lower triangle (restricted
+to the sliding-window band when configured), maintaining online-softmax
+statistics in fp32. Versus the naive masked formulation this
+ (a) bounds live memory to one block of scores,
+ (b) emits *only useful* FLOPs into the HLO — the compiled cost analysis and
+     roofline compute term then reflect real work (no 2x causal waste), and
+ (c) carries a custom VJP (FlashAttention-2 style block-recompute backward)
+     so training memory stays O(S) rather than O(S^2).
+
+The Pallas kernels in repro.kernels implement the same blocking for the TPU
+target; tests cross-validate naive ref / pair-scan / kernel, including grads.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(s, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(s / cap)
+    return s
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, logit_softcap=0.0):
+    """Reference O(S^2)-memory attention. q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgd,bmkd->bkgqm", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = _softcap(s / math.sqrt(hd), logit_softcap)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqm,bmkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _block_pairs(nq: int, nk: int, window_chunks: int | None, causal: bool):
+    import numpy as np
+    pairs = []
+    for i in range(nq):
+        lo = 0 if window_chunks is None else max(0, i - window_chunks)
+        hi = i if causal else nk - 1
+        for j in range(lo, hi + 1):
+            pairs.append((i, j))
+    # plain numpy: stays concrete under custom_vjp tracing (the unrolled
+    # probe path iterates it in Python)
+    return np.asarray(pairs, np.int32)
+
+
+def _block_mask(i, j, cq, ck, causal, window, kv_len):
+    rows = i * cq + jnp.arange(cq)[:, None]
+    cols = j * ck + jnp.arange(ck)[None, :]
+    mask = cols < kv_len
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    return mask
+
+
+def _needs_mask(causal, window, kv_len, nk, ck):
+    return causal or window is not None or kv_len != nk * ck
+
+
+def _run_pairs(body, carry, pairs, unroll: bool):
+    """lax.scan over block pairs, or a static Python unroll (cost probes)."""
+    if unroll:
+        import numpy as _np
+        for pr in _np.asarray(pairs):
+            carry, _ = body(carry, (int(pr[0]), int(pr[1])))
+        return carry
+    carry, _ = jax.lax.scan(body, carry, pairs)
+    return carry
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, chunk, causal, window, logit_softcap, kv_len, unroll):
+    out, _ = _flash_fwd_impl(q, k, v, chunk, causal, window, logit_softcap,
+                             kv_len, unroll)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, chunk, causal, window, logit_softcap, kv_len,
+                    unroll=False):
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    n = S // chunk
+    ck = chunk
+    nk = Sk // ck
+    wc = None if window is None else -(-window // chunk)
+    pairs = _block_pairs(n, nk, wc, causal)
+    masked = _needs_mask(causal, window, kv_len, nk, ck)
+    qg = q.reshape(B, n, chunk, KV, G, hd)
+    kg = k.reshape(B, nk, ck, KV, hd)
+    vg = v.reshape(B, nk, ck, KV, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    out = jnp.zeros((B, n, chunk, KV, G, hd), jnp.float32)
+    m = jnp.full((B, n, chunk, KV, G), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, n, chunk, KV, G), jnp.float32)
+
+    def body(carry, pair):
+        out, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qg, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kg, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vg, j, 1, keepdims=False)
+        s = jnp.einsum("bqkgd,bmkd->bqkgm", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        s = _softcap(s, logit_softcap)
+        if masked:
+            mask = _block_mask(i, j, chunk, ck, causal, window, kv_len)
+            s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        oi = jax.lax.dynamic_index_in_dim(out, i, 1, keepdims=False)
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(mi - m_new)
+        l_new = li * alpha + jnp.sum(p, axis=-1)
+        o_new = oi * alpha[..., None] + jnp.einsum(
+            "bqkgm,bmkd->bqkgd", p, vj.astype(jnp.float32))
+        out = jax.lax.dynamic_update_index_in_dim(out, o_new, i, 1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 1)
+        return (out, m, l), None
+
+    out, m, l = _run_pairs(body, (out, m, l), pairs, unroll)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = out / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(B, S, H, hd).astype(q.dtype)
+    return out, lse  # lse: (B, n, chunk, KV, G)
+
+
+def _flash_fwd(q, k, v, chunk, causal, window, logit_softcap, kv_len, unroll):
+    out, lse = _flash_fwd_impl(q, k, v, chunk, causal, window, logit_softcap,
+                               kv_len, unroll)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(chunk, causal, window, logit_softcap, kv_len, unroll, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    n = S // chunk
+    ck = chunk
+    nk = Sk // ck
+    wc = None if window is None else -(-window // chunk)
+    pairs = _block_pairs(n, nk, wc, causal)
+    masked = _needs_mask(causal, window, kv_len, nk, ck)
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, n, chunk, KV, G, hd)
+    kg = k.reshape(B, nk, ck, KV, hd)
+    vg = v.reshape(B, nk, ck, KV, hd)
+    og = out.reshape(B, n, chunk, KV, G, hd).astype(jnp.float32)
+    dog = dout.reshape(B, n, chunk, KV, G, hd).astype(jnp.float32)
+    # delta_i = rowsum(dO * O)
+    delta = jnp.sum(og * dog, axis=-1)  # (B, n, chunk, KV, G)
+
+    dq = jnp.zeros((B, n, chunk, KV, G, hd), jnp.float32)
+    dk = jnp.zeros((B, nk, ck, KV, hd), jnp.float32)
+    dv = jnp.zeros((B, nk, ck, KV, hd), jnp.float32)
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qg, i, 1, keepdims=False).astype(jnp.float32)
+        kj = jax.lax.dynamic_index_in_dim(kg, j, 1, keepdims=False).astype(jnp.float32)
+        vj = jax.lax.dynamic_index_in_dim(vg, j, 1, keepdims=False).astype(jnp.float32)
+        lse_i = jax.lax.dynamic_index_in_dim(lse, i, 1, keepdims=False)
+        do_i = jax.lax.dynamic_index_in_dim(dog, i, 1, keepdims=False)
+        dl_i = jax.lax.dynamic_index_in_dim(delta, i, 1, keepdims=False)
+
+        s_raw = jnp.einsum("bqkgd,bmkd->bqkgm", qi, kj) * scale
+        s = _softcap(s_raw, logit_softcap)
+        if masked:
+            mask = _block_mask(i, j, chunk, ck, causal, window, kv_len)
+            s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse_i[..., None])  # (B,q,KV,G,m)
+
+        dv_j = jnp.einsum("bqkgm,bqkgd->bmkd", p, do_i)
+        dp = jnp.einsum("bqkgd,bmkd->bqkgm", do_i, vj)
+        ds = p * (dp - dl_i[..., None])
+        if logit_softcap and logit_softcap > 0:
+            ds = ds * (1.0 - jnp.square(jnp.tanh(s_raw / logit_softcap)))
+        if masked:
+            ds = jnp.where(mask[:, None, None, :], ds, 0.0)
+        dq_i = jnp.einsum("bqkgm,bmkd->bqkgd", ds, kj) * scale
+        dk_j = jnp.einsum("bqkgm,bqkgd->bmkd", ds, qi) * scale
+
+        dq = jax.lax.dynamic_update_index_in_dim(
+            dq, jax.lax.dynamic_index_in_dim(dq, i, 1, keepdims=False) + dq_i, i, 1)
+        dk = jax.lax.dynamic_update_index_in_dim(
+            dk, jax.lax.dynamic_index_in_dim(dk, j, 1, keepdims=False) + dk_j, j, 1)
+        dv = jax.lax.dynamic_update_index_in_dim(
+            dv, jax.lax.dynamic_index_in_dim(dv, j, 1, keepdims=False) + dv_j, j, 1)
+        return (dq, dk, dv), None
+
+    dq, dk, dv = _run_pairs(body, (dq, dk, dv), pairs, unroll)
+    return (dq.reshape(q.shape).astype(q.dtype),
+            dk.reshape(k.shape).astype(k.dtype),
+            dv.reshape(v.shape).astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, chunk: int = 512, causal: bool = True,
+                    window: int | None = None, logit_softcap: float = 0.0,
+                    unroll: bool = False):
+    """Pair-scan flash attention with flash backward.
+
+    q: (B, S, H, hd); k, v: (B, Sk, KV, hd); H a multiple of KV.
+    Non-divisible lengths are zero-padded to the chunk grid and masked.
+    ``unroll`` statically unrolls the block loop (dry-run cost probes only).
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    chunk = min(chunk, max(Sq, 1))
+    pad_q = (-Sq) % chunk
+    pad_k = (-Sk) % chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out = _flash(q, k, v, chunk, causal, window, logit_softcap, Sk, unroll)
+    if pad_q:
+        out = out[:, :Sq]
+    return out
+
+
+def sharded_decode_attention(q, k_cache, v_cache, cache_positions, pos, *,
+                             window: int | None = None,
+                             logit_softcap: float = 0.0, ctx=None):
+    """Flash-decode over a sequence-sharded KV cache (beyond-paper §Perf).
+
+    The cache window axis is sharded over the TP axis; each shard computes
+    a partial online softmax over its slots and the shards combine with
+    three tiny collectives (pmax of the running max, psum of the rescaled
+    numerator (B,H,hd) and denominator (B,H)). This replaces GSPMD's
+    auto-partitioning of softmax-over-sharded-axis, which gathers
+    score-sized tensors (~score_bytes per layer per token) — the dominant
+    collective cost in the decode_32k baseline cells.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if ctx is None:
+        from repro.sharding.ctx import current
+        ctx = current()
+    B, W, KV, hd = k_cache.shape
+    H = q.shape[1]
+    tp = ctx.tp_axis
+    if W % ctx.mesh.shape[tp] != 0:
+        return decode_attention(q, k_cache, v_cache, cache_positions, pos,
+                                logit_softcap=logit_softcap, window=window)
+    dp = ctx.dp
+
+    def local(q, kc, vc, sp, pos):
+        G = H // KV
+        qg = q.reshape(-1, KV, G, hd)
+        s = jnp.einsum("bkgd,bmkd->bkgm", qg.astype(jnp.float32),
+                       kc.astype(jnp.float32)) / math.sqrt(hd)
+        s = _softcap(s, logit_softcap)
+        valid = (sp >= 0) & (sp <= pos[:, None])
+        if window is not None:
+            valid &= sp > (pos[:, None] - window)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_loc = jnp.max(s, axis=-1)                       # (b,KV,G)
+        m_glob = jax.lax.pmax(m_loc, tp)
+        p = jnp.exp(s - m_glob[..., None])
+        denom = jax.lax.psum(jnp.sum(p, axis=-1), tp)     # (b,KV,G)
+        num = jax.lax.psum(
+            jnp.einsum("bkgm,bmkd->bkgd", p, vc.astype(jnp.float32)), tp)
+        out = num / jnp.maximum(denom[..., None], 1e-30)
+        return out.reshape(-1, H, hd).astype(q.dtype)
+
+    mesh = ctx.mesh
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(dp, None, None), P(dp, tp, None, None),
+                  P(dp, tp, None, None), P(dp, tp), P(dp)),
+        out_specs=P(dp, None, None),
+    )(q, k_cache, v_cache, cache_positions, pos)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, pos, *,
+                     logit_softcap: float = 0.0, window: int | None = None):
+    """Single-token attention against a (possibly rolling) KV cache.
+
+    q: (B, H, hd) — one new token per sequence.
+    k_cache/v_cache: (B, W, KV, hd) where W = max_seq (full cache) or the
+    sliding-window size (rolling cache).
+    cache_positions: (B, W) int32 — absolute position stored in each slot
+    (-1 = empty). pos: (B,) int32 — the query token's absolute position.
+    """
+    B, W, KV, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bmkd->bkgm", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(hd)
+    s = _softcap(s, logit_softcap)
+    valid = (cache_positions >= 0) & (cache_positions <= pos[:, None])
+    if window is not None:
+        valid &= cache_positions > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgm,bmkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

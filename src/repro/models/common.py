@@ -1,0 +1,132 @@
+"""Shared LM building blocks: rotary embeddings (incl. multimodal M-RoPE),
+norm dispatch, token/positional embeddings, depthwise causal conv."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.layers import nonparametric_layernorm
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, dim: int):
+    if cfg.norm == "nonparametric":
+        return jnp.zeros((0,), jnp.float32)  # placeholder leaf (no params)
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+    return {"scale": jnp.ones((dim,), jnp.float32)}  # rmsnorm
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    dtype = x.dtype
+    if cfg.norm == "nonparametric":
+        return nonparametric_layernorm(x).astype(dtype)
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        return (((xf - mean) * jax.lax.rsqrt(var + 1e-5)) * p["scale"] + p["bias"]).astype(dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]).astype(dtype)
+
+
+def rms_head_norm(scale, x):
+    """qk-norm (qwen3): RMSNorm over head_dim with a learned (head_dim,) scale."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, position_ids, theta: float, sections):
+    """Qwen2-VL multimodal RoPE. position_ids: (3, ..., S) for (t, h, w);
+    ``sections`` split hd/2 frequency slots across the three axes."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    # Per-frequency-slot position row: slot s uses axis a(s).
+    sec = jnp.asarray(sections)
+    axis_of_slot = jnp.repeat(jnp.arange(3), sec, total_repeat_length=hd // 2)
+    # positions: (3, ..., S) -> (..., S, hd/2) selecting the right axis per slot
+    pos = jnp.moveaxis(position_ids, 0, -1).astype(jnp.float32)  # (..., S, 3)
+    pos_per_slot = jnp.take(pos, axis_of_slot, axis=-1)  # (..., S, hd/2)
+    angles = pos_per_slot * freqs
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_encode(cfg: ModelConfig, x, positions):
+    """Dispatch q/k position encoding. positions: (…, S) int or (3, …, S)
+    for M-RoPE."""
+    if cfg.mrope:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal table (encoder)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-math.log(10_000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    tab = jnp.zeros((seq_len, dim), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (mamba front)
+# ---------------------------------------------------------------------------
+
+
+def causal_depthwise_conv(u, w, b):
+    """u: (B, S, C); w: (C, K); b: (C,). Causal depthwise 1-D conv."""
+    k = w.shape[-1]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad,
+        w.T[:, None, :],  # (K, 1, C) -> spec below maps to depthwise
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=u.shape[-1],
+    )
+    return out + b
+
+
+def conv_step(u_t, conv_state, w, b):
+    """One decode step of the causal depthwise conv.
+
+    u_t: (B, C) new input; conv_state: (B, K-1, C) previous inputs.
+    Returns (y_t (B, C), new_state)."""
+    window = jnp.concatenate([conv_state, u_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,ck->bc", window, w) + b
+    return y, window[:, 1:, :]

@@ -1,0 +1,293 @@
+"""Per-layer blocks: attention (train/prefill + decode), MLP/MoE, hybrid
+attn+SSM combination (hymba), and whisper encoder/decoder layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.common import norm_apply, norm_init, position_encode, rms_head_norm
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import ssm_apply, ssm_decode_step, ssm_init
+from repro.nn.module import normal_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, dtype, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kvk, ko = split_keys(key, 4)
+    p = {
+        "wq": normal_init(kq, (d, h * hd), stddev=0.02, dtype=dtype),
+        "wk": normal_init(kk, (d, kv * hd), stddev=0.02, dtype=dtype),
+        "wv": normal_init(kvk, (d, kv * hd), stddev=0.02, dtype=dtype),
+        "wo": normal_init(ko, (h * hd, d), stddev=0.02, dtype=dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, *, rope: bool):
+    b = x.shape[0]
+    s = x.shape[1]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if rope:
+        q = position_encode(cfg, q, positions)
+        k = position_encode(cfg, k, positions)
+    return q, k, v
+
+
+def attn_forward(p, x, positions, cfg: ModelConfig, *, causal: bool = True):
+    """Full-sequence attention (train/prefill). Returns (out, (k, v))."""
+    # whisper uses absolute position embeddings added at embed time, no rope
+    rope = cfg.family != "audio"
+    q, k, v = _project_qkv(p, x, cfg, positions, rope=rope)
+    out = attn_lib.flash_attention(
+        q, k, v,
+        chunk=cfg.attn_chunk,
+        causal=causal,
+        window=cfg.sliding_window,
+        logit_softcap=cfg.attn_logit_softcap,
+        unroll=cfg.attn_unroll,
+    )
+    b, s = x.shape[0], x.shape[1]
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim) @ p["wo"]
+    return out, (k, v)
+
+
+def attn_decode(p, x_t, layer_cache, slot_pos, pos, cfg: ModelConfig):
+    """One-token attention. x_t: (B, D); layer_cache: {"k","v"}: (B, W, KV, hd).
+    Returns (out (B, D), new_layer_cache, (k_t, v_t))."""
+    b = x_t.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rope = cfg.family != "audio"
+    x1 = x_t[:, None, :]
+    if cfg.mrope:
+        positions = pos  # (3, B) -> handled as (3, B, 1) inside
+        positions = positions[..., None]
+        pos_scalar = pos[0]
+    else:
+        positions = pos[:, None]
+        pos_scalar = pos
+    q, k, v = _project_qkv(p, x1, cfg, positions, rope=rope)
+    q = q[:, 0]  # (B, H, hd)
+    k_t, v_t = k[:, 0], v[:, 0]  # (B, KV, hd)
+
+    w = layer_cache["k"].shape[1]
+    slot = pos_scalar % w  # (B,)
+    onehot = jax.nn.one_hot(slot, w, dtype=layer_cache["k"].dtype)[:, :, None, None]
+    new_k = layer_cache["k"] * (1 - onehot) + k_t[:, None] * onehot
+    new_v = layer_cache["v"] * (1 - onehot) + v_t[:, None] * onehot
+    from repro.sharding.ctx import current as _shard_ctx
+    ctx = _shard_ctx()
+    if cfg.decode_flash_shardmap and ctx is not None:
+        out = attn_lib.sharded_decode_attention(
+            q, new_k, new_v, slot_pos, pos_scalar,
+            logit_softcap=cfg.attn_logit_softcap,
+            window=cfg.sliding_window, ctx=ctx)
+    else:
+        out = attn_lib.decode_attention(
+            q, new_k, new_v, slot_pos, pos_scalar,
+            logit_softcap=cfg.attn_logit_softcap,
+            window=cfg.sliding_window,
+        )
+    out = out.reshape(b, h * hd) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+def cross_attn_forward(p, x, enc_out, cfg: ModelConfig):
+    """Decoder->encoder cross attention (whisper). No rope, no causality."""
+    b, s = x.shape[0], x.shape[1]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (enc_out @ p["wk"]).reshape(b, enc_out.shape[1], kv, hd)
+    v = (enc_out @ p["wv"]).reshape(b, enc_out.shape[1], kv, hd)
+    if s == 1:  # decode step: one naive block beats a 1-wide chunk scan
+        out = attn_lib.naive_attention(q, k, v, causal=False)
+    else:
+        out = attn_lib.flash_attention(q, k, v, chunk=cfg.attn_chunk,
+                                       causal=False, unroll=cfg.attn_unroll)
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu":
+        kg, ku, ko = split_keys(key, 3)
+        return {
+            "wg": normal_init(kg, (d, f), stddev=0.02, dtype=dtype),
+            "wu": normal_init(ku, (d, f), stddev=0.02, dtype=dtype),
+            "wo": normal_init(ko, (f, d), stddev=0.02, dtype=dtype),
+        }
+    ki, ko = split_keys(key, 2)
+    return {
+        "wi": normal_init(ki, (d, f), stddev=0.02, dtype=dtype),
+        "wo": normal_init(ko, (f, d), stddev=0.02, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    if "wg" in p:
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decoder layer (dense / moe / ssm / hybrid)
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg: ModelConfig, dtype):
+    keys = split_keys(key, 5)
+    p = {"ln1": norm_init(cfg, cfg.d_model)}
+    if cfg.family == "ssm":
+        p["ssm"] = ssm_init(keys[0], cfg, dtype)
+        return p
+    p["attn"] = attn_init(keys[0], cfg, dtype)
+    if cfg.hybrid:
+        p["ssm"] = ssm_init(keys[1], cfg, dtype)
+        p["attn_branch_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ssm_branch_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["ln2"] = norm_init(cfg, cfg.d_model)
+    if cfg.num_experts:
+        p["moe"] = moe_init(keys[2], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(keys[2], cfg, dtype)
+    return p
+
+
+def _branch_rms(scale, x):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+def layer_forward(p, x, positions, cfg: ModelConfig, dp_groups: int = 1):
+    """Full-sequence decoder layer.
+
+    Returns (x, kv_or_None, ssm_state_or_None, aux_loss)."""
+    h = norm_apply(cfg, p["ln1"], x)
+    aux = jnp.zeros((), jnp.float32)
+    kv, ssm_state = None, None
+    if cfg.family == "ssm":
+        y, ssm_state = ssm_apply(p["ssm"], h, cfg)
+        return x + y, None, ssm_state, aux
+    a, kv = attn_forward(p["attn"], h, positions, cfg, causal=True)
+    if cfg.hybrid:
+        s, ssm_state = ssm_apply(p["ssm"], h, cfg)
+        a = 0.5 * (_branch_rms(p["attn_branch_norm"], a)
+                   + _branch_rms(p["ssm_branch_norm"], s))
+    x = x + a
+    h2 = norm_apply(cfg, p["ln2"], x)
+    if cfg.num_experts:
+        y, aux = moe_apply(p["moe"], h2, cfg, dp_groups)
+    else:
+        y = mlp_apply(p["mlp"], h2, cfg)
+    return x + y, kv, ssm_state, aux
+
+
+def layer_decode(p, x_t, layer_cache, slot_pos, pos, cfg: ModelConfig,
+                 dp_groups: int = 1):
+    """One-token decoder layer. x_t: (B, D). Returns (x_t, new_layer_cache)."""
+    h = norm_apply(cfg, p["ln1"], x_t)
+    new_cache = dict(layer_cache)
+    if cfg.family == "ssm":
+        y, ssm_state = ssm_decode_step(
+            p["ssm"], h, {"h": layer_cache["h"], "conv": layer_cache["conv"]}, cfg)
+        new_cache.update(ssm_state)
+        return x_t + y, new_cache  # noqa: single-branch ssm layer
+    a, kv_cache = attn_decode(
+        p["attn"], h, {"k": layer_cache["k"], "v": layer_cache["v"]},
+        slot_pos, pos, cfg)
+    new_cache.update(kv_cache)
+    if cfg.hybrid:
+        y, ssm_state = ssm_decode_step(
+            p["ssm"], h, {"h": layer_cache["h"], "conv": layer_cache["conv"]}, cfg)
+        new_cache.update(ssm_state)
+        a = 0.5 * (_branch_rms(p["attn_branch_norm"], a)
+                   + _branch_rms(p["ssm_branch_norm"], y))
+    x_t = x_t + a
+    h2 = norm_apply(cfg, p["ln2"], x_t)
+    if cfg.num_experts:
+        y2, _ = moe_apply(p["moe"], h2[:, None, :], cfg, dp_groups)
+        y2 = y2[:, 0]
+    else:
+        y2 = mlp_apply(p["mlp"], h2, cfg)
+    return x_t + y2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder / decoder layers
+# ---------------------------------------------------------------------------
+
+
+def enc_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = split_keys(key, 2)
+    return {
+        "ln1": norm_init(cfg, cfg.d_model),
+        "attn": attn_init(k1, cfg, dtype),
+        "ln2": norm_init(cfg, cfg.d_model),
+        "mlp": mlp_init(k2, cfg, dtype),
+    }
+
+
+def enc_layer_forward(p, x, positions, cfg: ModelConfig):
+    h = norm_apply(cfg, p["ln1"], x)
+    a, _ = attn_forward(p["attn"], h, positions, cfg, causal=False)
+    x = x + a
+    h2 = norm_apply(cfg, p["ln2"], x)
+    return x + mlp_apply(p["mlp"], h2, cfg)
+
+
+def dec_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "ln1": norm_init(cfg, cfg.d_model),
+        "attn": attn_init(k1, cfg, dtype),
+        "ln_x": norm_init(cfg, cfg.d_model),
+        "xattn": attn_init(k2, cfg, dtype, cross=True),
+        "ln2": norm_init(cfg, cfg.d_model),
+        "mlp": mlp_init(k3, cfg, dtype),
+    }
+
+
+def dec_layer_forward(p, x, enc_out, positions, cfg: ModelConfig):
+    h = norm_apply(cfg, p["ln1"], x)
+    a, kv = attn_forward(p["attn"], h, positions, cfg, causal=True)
+    x = x + a
+    hx = norm_apply(cfg, p["ln_x"], x)
+    x = x + cross_attn_forward(p["xattn"], hx, enc_out, cfg)
+    h2 = norm_apply(cfg, p["ln2"], x)
+    return x + mlp_apply(p["mlp"], h2, cfg), kv
+
+
+def dec_layer_decode(p, x_t, enc_out, layer_cache, slot_pos, pos, cfg: ModelConfig):
+    h = norm_apply(cfg, p["ln1"], x_t)
+    a, kv_cache = attn_decode(
+        p["attn"], h, {"k": layer_cache["k"], "v": layer_cache["v"]},
+        slot_pos, pos, cfg)
+    x_t = x_t + a
+    hx = norm_apply(cfg, p["ln_x"], x_t)
+    xa = cross_attn_forward(p["xattn"], hx[:, None, :], enc_out, cfg)[:, 0]
+    x_t = x_t + xa
+    h2 = norm_apply(cfg, p["ln2"], x_t)
+    new_cache = dict(layer_cache)
+    new_cache.update(kv_cache)
+    return x_t + mlp_apply(p["mlp"], h2, cfg), new_cache

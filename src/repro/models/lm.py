@@ -1,0 +1,365 @@
+"""Unified LM interface over all assigned architectures.
+
+Public surface (all pure functions, shard-agnostic — sharding is applied by
+the launchers via in_shardings/out_shardings + sharding/specs.py):
+
+    init_params(key, cfg)                     -> params
+    train_loss(params, batch, cfg, dp_groups) -> (loss, metrics)
+    prefill(params, batch, cfg, dp_groups)    -> (cache, last_logits)
+    decode_step(params, cache, batch, cfg)    -> (cache, logits)
+    init_cache(cfg, batch, max_seq)           -> cache pytree
+
+Layers are scan-stacked; ``cfg.remat`` wraps the scan body. Families:
+dense (olmo/qwen3/mistral-large/llama3), moe (mixtral), ssm (falcon-mamba),
+hybrid (hymba), vlm (qwen2-vl backbone; stub patch embeddings in),
+audio (whisper enc-dec; stub frame embeddings in).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import norm_apply, norm_init, sinusoidal_positions
+from repro.models.ssm import ssm_state_shapes
+from repro.nn.module import normal_init, split_keys
+from repro.sharding.ctx import constrain
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    keys = split_keys(key, 8)
+    params = {}
+    params["embed"] = normal_init(keys[0], (cfg.padded_vocab, cfg.d_model),
+                                  stddev=0.02, dtype=dtype)
+    if cfg.encoder_decoder:
+        enc_keys = jnp.stack(split_keys(keys[1], cfg.num_encoder_layers))
+        dec_keys = jnp.stack(split_keys(keys[2], cfg.num_layers))
+        params["enc_layers"] = jax.vmap(
+            lambda k: L.enc_layer_init(k, cfg, dtype))(enc_keys)
+        params["layers"] = jax.vmap(
+            lambda k: L.dec_layer_init(k, cfg, dtype))(dec_keys)
+        params["enc_norm"] = norm_init(cfg, cfg.d_model)
+        params["dec_pos"] = normal_init(keys[3], (32_768, cfg.d_model),
+                                        stddev=0.01, dtype=dtype)
+    else:
+        lkeys = jnp.stack(split_keys(keys[1], cfg.num_layers))
+        params["layers"] = jax.vmap(lambda k: L.layer_init(k, cfg, dtype))(lkeys)
+    params["final_norm"] = norm_init(cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(keys[4], (cfg.d_model, cfg.padded_vocab),
+                                        stddev=0.02, dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _default_positions(cfg: ModelConfig, batch, b, s):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _embed_in(params, cfg: ModelConfig, batch):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return constrain(x, "residual")
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = norm_apply(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return constrain(logits, "logits")
+
+
+def _run_layers(params, cfg: ModelConfig, x, positions, dp_groups):
+    """Scan the decoder stack.
+
+    Returns (x, kvs, ssm_states, aux) — per-layer outputs stacked (L, ...).
+    Unused outputs (e.g. kvs during training) are DCE'd by XLA."""
+
+    def block(carry, p_layer):
+        carry = constrain(carry, "residual")
+        y, kv, ssm_state, aux = L.layer_forward(p_layer, carry, positions, cfg, dp_groups)
+        return constrain(y, "residual"), (kv, ssm_state, aux)
+
+    body = _remat(block, cfg)
+    if cfg.scan_layers:
+        x, (kvs, ssm_states, auxs) = jax.lax.scan(body, x, params["layers"])
+        return x, kvs, ssm_states, jnp.mean(auxs)
+    outs = []
+    n = cfg.num_layers
+    for i in range(n):
+        p_layer = jax.tree.map(lambda a: a[i], params["layers"])
+        x, out = body(x, p_layer)
+        outs.append(out)
+    stack = lambda *xs: jnp.stack(xs)
+    kvs = jax.tree.map(stack, *[o[0] for o in outs]) if outs[0][0] is not None else None
+    ssm_states = jax.tree.map(stack, *[o[1] for o in outs]) if outs[0][1] is not None else None
+    aux = jnp.mean(jnp.stack([o[2] for o in outs]))
+    return x, kvs, ssm_states, aux
+
+
+def _whisper_encode(params, cfg: ModelConfig, enc_embeds):
+    b, s, _ = enc_embeds.shape
+    x = enc_embeds.astype(_dtype(cfg))
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    def block(carry, p_layer):
+        return L.enc_layer_forward(p_layer, carry, positions, cfg), None
+
+    body = _remat(block, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.num_encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+    return norm_apply(cfg, params["enc_norm"], x)
+
+
+def _whisper_decode_stack(params, cfg: ModelConfig, tokens, enc_out):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + params["dec_pos"][:s][None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    def block(carry, p_layer):
+        y, kv = L.dec_layer_forward(p_layer, carry, enc_out, positions, cfg)
+        return y, kv
+
+    body = _remat(block, cfg)
+    if cfg.scan_layers:
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        return x, kvs
+    kv_list = []
+    for i in range(cfg.num_layers):
+        x, kv = body(x, jax.tree.map(lambda a: a[i], params["layers"]))
+        kv_list.append(kv)
+    kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+    return x, kvs
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, batch, cfg: ModelConfig, dp_groups: int = 1):
+    """batch: tokens/embeds (+positions) and labels (B, S); -100 = masked."""
+    labels = batch["labels"]
+    if cfg.encoder_decoder:
+        enc_out = _whisper_encode(params, cfg, batch["embeds"])
+        x, _ = _whisper_decode_stack(params, cfg, batch["tokens"], enc_out)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x = _embed_in(params, cfg, batch)
+        b, s = x.shape[0], x.shape[1]
+        positions = _default_positions(cfg, batch, b, s)
+        x, _, _, aux = _run_layers(params, cfg, x, positions, dp_groups)
+    logits = _logits(params, cfg, x)
+    # Shard-friendly cross entropy: every vocab-axis op is a reduction or
+    # elementwise, so a vocab-TP-sharded logits tensor never gets gathered
+    # (only (B, S)-sized partial-reduce all-reduces cross chips).
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    safe_labels = jnp.maximum(labels, 0)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == safe_labels[..., None], shifted, 0.0), axis=-1)
+    nll = lse - label_logit
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    total = loss + 0.01 * aux
+    metrics = {"loss": loss, "aux_loss": aux,
+               "tokens": jnp.sum(mask)}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def cache_window(cfg: ModelConfig, max_seq: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Zero cache for ``batch`` sequences with capacity ``max_seq``."""
+    dtype = _dtype(cfg)
+    cache = {"pos": jnp.zeros((batch,), jnp.int32)}
+    lcache = {}
+    if cfg.family != "ssm":
+        w = cache_window(cfg, max_seq)
+        kvd = (cfg.num_layers, batch, w, cfg.num_kv_heads, cfg.head_dim)
+        lcache["k"] = jnp.zeros(kvd, dtype)
+        lcache["v"] = jnp.zeros(kvd, dtype)
+        cache["slot_pos"] = jnp.full((batch, w), -1, jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        shapes = ssm_state_shapes(cfg, batch)
+        lcache["h"] = jnp.zeros((cfg.num_layers,) + shapes["h"], jnp.float32)
+        lcache["conv"] = jnp.zeros((cfg.num_layers,) + shapes["conv"], jnp.float32)
+    cache["layers"] = lcache
+    if cfg.encoder_decoder:
+        cache["enc_out"] = jnp.zeros((batch, cfg.encoder_len, cfg.d_model), dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch, cfg: ModelConfig, dp_groups: int = 1,
+            max_seq: int | None = None):
+    """Process the full prompt; return (cache, last-token logits)."""
+    if cfg.encoder_decoder:
+        enc_out = _whisper_encode(params, cfg, batch["embeds"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x, kvs = _whisper_decode_stack(params, cfg, tokens, enc_out)
+        cache = init_cache(cfg, b, max_seq or s)
+        cache["enc_out"] = enc_out[:, :cfg.encoder_len]
+        kvs_dict = {"k": kvs[0], "v": kvs[1]}
+        cache = _fill_kv(cache, kvs_dict, cfg, s)
+        cache["pos"] = jnp.full((b,), s, jnp.int32)
+        return cache, _logits(params, cfg, x[:, -1])
+
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = _default_positions(cfg, batch, b, s)
+    x, kvs, ssm_states, _ = _run_layers(params, cfg, x, positions, dp_groups)
+    cache = init_cache(cfg, b, max_seq or s)
+    if cfg.family != "ssm" and kvs is not None:
+        cache = _fill_kv(cache, {"k": kvs[0], "v": kvs[1]}, cfg, s)
+    if cfg.family in ("ssm", "hybrid"):
+        cache["layers"]["h"] = ssm_states["h"]
+        cache["layers"]["conv"] = ssm_states["conv"]
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    return cache, _logits(params, cfg, x[:, -1])
+
+
+def _fill_kv(cache, kvs, cfg: ModelConfig, s: int):
+    """Place prefill K/V (L, B, S, KV, hd) into the (rolling) cache."""
+    w = cache["layers"]["k"].shape[2]
+    if s <= w:
+        k = jnp.pad(kvs["k"], ((0, 0), (0, 0), (0, w - s), (0, 0), (0, 0)))
+        v = jnp.pad(kvs["v"], ((0, 0), (0, 0), (0, w - s), (0, 0), (0, 0)))
+        slot_pos = jnp.concatenate(
+            [jnp.arange(s, dtype=jnp.int32),
+             jnp.full((w - s,), -1, jnp.int32)])
+    else:
+        # keep the last w positions, stored at their rolling slots p % w
+        tail = jnp.arange(s - w, s, dtype=jnp.int32)
+        slots = tail % w  # a static permutation of [0, w)
+        inv = jnp.zeros((w,), jnp.int32).at[slots].set(jnp.arange(w, dtype=jnp.int32))
+        k = jnp.take(kvs["k"][:, :, s - w:], inv, axis=2)
+        v = jnp.take(kvs["v"][:, :, s - w:], inv, axis=2)
+        slot_pos = jnp.zeros((w,), jnp.int32).at[slots].set(tail)
+    b = kvs["k"].shape[1]
+    cache["layers"]["k"] = k
+    cache["layers"]["v"] = v
+    cache["slot_pos"] = jnp.broadcast_to(slot_pos[None], (b, w))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, dp_groups: int = 1):
+    """One token for every sequence. batch: {"token": (B,)} (or "embed");
+    optional "positions" for M-RoPE: (3, B). Returns (cache, logits (B, V))."""
+    if "embed" in batch:
+        x = batch["embed"].astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"], batch["token"], axis=0)
+    x = constrain(x, "decode_x")
+    b = x.shape[0]
+    pos = cache["pos"]  # (B,)
+    if cfg.mrope:
+        positions = batch.get("positions",
+                              jnp.broadcast_to(pos[None], (3, b)))
+    else:
+        positions = pos
+    if cfg.encoder_decoder:
+        x = x + jnp.take(params["dec_pos"], jnp.minimum(pos, params["dec_pos"].shape[0] - 1), axis=0)
+
+    slot_pos = cache.get("slot_pos")
+    new_slot_pos = slot_pos
+    if slot_pos is not None:
+        w = slot_pos.shape[1]
+        slot = pos % w
+        onehot = jax.nn.one_hot(slot, w, dtype=jnp.int32)
+        new_slot_pos = slot_pos * (1 - onehot) + pos[:, None] * onehot
+
+    def block(carry, xs):
+        p_layer, layer_cache = xs
+        carry = constrain(carry, "decode_x")
+        if cfg.encoder_decoder:
+            y, new_lc = L.dec_layer_decode(
+                p_layer, carry, cache["enc_out"], layer_cache, new_slot_pos,
+                positions if not cfg.mrope else pos, cfg)
+        else:
+            y, new_lc = L.layer_decode(
+                p_layer, carry, layer_cache, new_slot_pos, positions, cfg,
+                dp_groups)
+        return constrain(y, "decode_x"), new_lc
+
+    if cfg.scan_layers:
+        x, new_layer_caches = jax.lax.scan(
+            block, x, (params["layers"], cache["layers"]))
+    else:
+        lc_list = []
+        for i in range(cfg.num_layers):
+            xs_i = jax.tree.map(lambda a: a[i], (params["layers"], cache["layers"]))
+            x, lc = block(x, xs_i)
+            lc_list.append(lc)
+        new_layer_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *lc_list)
+    logits = _logits(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layer_caches
+    new_cache["pos"] = pos + 1
+    if slot_pos is not None:
+        new_cache["slot_pos"] = new_slot_pos
+    return new_cache, logits

@@ -1,0 +1,115 @@
+"""Mixtral-style MoE layer: top-k routing with grouped capacity dispatch.
+
+TPU adaptation (DESIGN.md §4): instead of emulating GPU all-to-all expert
+parallelism, tokens are dispatched into a dense (groups, experts, capacity,
+d_model) buffer — one group per data shard, realized by reshaping the token
+axis to (dp_groups, local_tokens) and vmapping the dispatch. Every op is
+then embarrassingly parallel along the sharded group axis under pjit (no
+cross-shard scatter), and the expert FFN is a batched matmul that is
+TP-sharded over d_ff. Compute = top_k * capacity_factor * useful FLOPs.
+
+The routing problem itself is a miniature of the paper's scheduling problem
+(heterogeneous "edges" = experts, capacity = replicas); the analogy stops
+there — CoRaiS operates at the serving layer (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.module import normal_init, split_keys
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, ko = split_keys(key, 4)
+    return {
+        "router": normal_init(kr, (d, e), stddev=0.02, dtype=jnp.float32),
+        "wg": normal_init(kg, (e, d, f), stddev=0.02, dtype=dtype),
+        "wu": normal_init(ku, (e, d, f), stddev=0.02, dtype=dtype),
+        "wo": normal_init(ko, (e, f, d), stddev=0.02, dtype=dtype),
+    }
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.experts_per_token / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _dispatch_ffn(x, p, cfg: ModelConfig):
+    """Per-group dispatch + expert FFN + combine. x: (N, D)."""
+    n, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = _capacity(n, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"])  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(logits, k)  # (N, k)
+    gates = jax.nn.softmax(vals, axis=-1)  # renormalized over chosen experts
+
+    flat_e = idx.reshape(-1)  # (N*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(rank * onehot, axis=-1)  # rank within expert
+    keep = (pos < cap).astype(x.dtype)
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    token_idx = jnp.repeat(jnp.arange(n), k)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, pos_c].add(x[token_idx] * keep[:, None])
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wu"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+    y = out_buf[flat_e, pos_c] * (keep * gates.reshape(-1).astype(x.dtype))[:, None]
+    y = y.reshape(n, k, d).sum(axis=1)
+
+    # Switch-style load-balance aux loss: E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e / k * p_e)
+    return y, aux
+
+
+def _dense_moe(x, p, cfg: ModelConfig):
+    """Small-token path (decode): compute every expert densely and combine
+    by gate weight. k/E of the FLOPs are useful (4x waste for top-2-of-8),
+    but the token axis stays batch-sharded, there is no dispatch machinery
+    or capacity-floor padding, and no tokens are ever dropped — at decode
+    batch sizes the step is parameter-streaming-bound anyway (§Perf)."""
+    e, k = cfg.num_experts, cfg.experts_per_token
+    logits = x.astype(jnp.float32) @ p["router"]  # (B, S, E)
+    vals, idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(vals, axis=-1)
+    combine = jnp.sum(
+        jax.nn.one_hot(idx, e, dtype=jnp.float32) * gates[..., None], axis=-2)
+    # keep weights as bf16 dot operands (f32 only as the dot accumulator) —
+    # an f32 upcast would double the parameter-streaming traffic
+    h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, p["wg"])) * jnp.einsum(
+        "bsd,edf->bsef", x, p["wu"])
+    h = h.astype(x.dtype)
+    out = jnp.einsum("bsef,efd->bsed", h, p["wo"],
+                     preferred_element_type=jnp.float32)
+    y = jnp.einsum("bsed,bse->bsd", out, combine)
+    probs = jax.nn.softmax(logits, axis=-1)
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=-2),
+                   axis=(0, 1))
+    aux = e * jnp.sum(f_e / k * jnp.mean(probs, axis=(0, 1)))
+    return y.astype(x.dtype), aux
+
+
+def moe_apply(p, x, cfg: ModelConfig, dp_groups: int = 1):
+    """x: (B, S, D) -> (y, aux_loss). ``dp_groups`` must divide B*S and
+    match the data-parallel sharding of the token axis so dispatch stays
+    shard-local under pjit. Token counts too small to amortize the capacity
+    dispatch fall through to the dense path."""
+    b, s, d = x.shape
+    tokens = b * s
+    if cfg.moe_dense_decode and tokens <= 256:
+        return _dense_moe(x, p, cfg)
+    g = dp_groups if tokens % dp_groups == 0 else 1
+    xg = x.reshape(g, tokens // g, d)
+    y, aux = jax.vmap(lambda t: _dispatch_ffn(t, p, cfg))(xg)
+    return y.reshape(b, s, d), jnp.mean(aux)

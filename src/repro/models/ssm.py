@@ -1,0 +1,157 @@
+"""Mamba-1 selective SSM block (falcon-mamba; the SSM branch of hymba).
+
+TPU adaptation (DESIGN.md §4): the fused CUDA selective-scan kernel becomes
+a *chunked* scan — sequential lax.scan over sequence chunks carrying the
+(B, d_inner, d_state) hidden state, with an associative scan inside each
+chunk. The (B, chunk, d_inner, d_state) discretized tensors exist only per
+chunk, bounding live memory to VMEM-friendly tiles; d_inner is TP-sharded.
+repro.kernels.mamba_scan implements the same chunking as a Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import causal_depthwise_conv, conv_step
+from repro.nn.module import normal_init, split_keys, uniform_init
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    d, di, ds, dr, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                        cfg.ssm_dt_rank, cfg.ssm_conv)
+    keys = split_keys(key, 6)
+    # S4D-real initialization for A; dt bias init so softplus(dt) ~ U(1e-3, 1e-1)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt = jnp.exp(
+        jax.random.uniform(keys[5], (di,)) * (jnp.log(0.1) - jnp.log(1e-3))
+        + jnp.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": normal_init(keys[0], (d, 2 * di), stddev=0.02, dtype=dtype),
+        "conv_w": normal_init(keys[1], (di, k), stddev=0.02, dtype=jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": normal_init(keys[2], (di, dr + 2 * ds), stddev=0.02, dtype=dtype),
+        "dt_proj": uniform_init(keys[3], (dr, di), fan_in=dr, dtype=jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": normal_init(keys[4], (di, d), stddev=0.02, dtype=dtype),
+    }
+
+
+def _chunk_combine(h0, dA, dBu):
+    """Associative scan of h_t = dA_t * h_{t-1} + dBu_t within one chunk.
+
+    h0: (B, d, N); dA, dBu: (B, c, d, N). Returns (h_last, h_all)."""
+
+    def op(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    a, b = jax.lax.associative_scan(op, (dA, dBu), axis=1)
+    h = a * h0[:, None] + b
+    return h[:, -1], h
+
+
+def ssm_scan(u, dt, B_mat, C_mat, A, chunk: int = 256, unroll: bool = False,
+             scan_dtype=jnp.float32):
+    """Selective scan. u, dt: (B, S, d); B_mat, C_mat: (B, S, N); A: (d, N).
+    Returns (y: (B, S, d) fp32, h_last: (B, d, N)). ``unroll`` statically
+    unrolls the chunk loop (dry-run cost probes). ``scan_dtype`` controls
+    the discretized (B, c, d, N) tensors — bf16 halves the dominant memory
+    traffic of the memory-bound SSM cells (§Perf variant)."""
+    b, s, d = u.shape
+    n = A.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def body(h, xs):
+        u_c, dt_c, b_c, c_c = xs  # (B, c, ...)
+        dA = jnp.exp(dt_c[..., None] * A).astype(scan_dtype)  # (B, c, d, N)
+        dBu = (dt_c[..., None] * b_c[:, :, None, :]
+               * u_c[..., None]).astype(scan_dtype)
+        h_last, h_all = _chunk_combine(h, dA, dBu)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_all.astype(jnp.float32), c_c)
+        return h_last, y_c
+
+    xs = (
+        u.reshape(b, nc, chunk, d).swapaxes(0, 1),
+        dt.reshape(b, nc, chunk, d).swapaxes(0, 1),
+        B_mat.reshape(b, nc, chunk, n).swapaxes(0, 1),
+        C_mat.reshape(b, nc, chunk, n).swapaxes(0, 1),
+    )
+    h0 = jnp.zeros((b, d, n), scan_dtype)
+    if unroll:
+        h, ys_list = h0, []
+        for i in range(nc):
+            h, y_c = body(h, jax.tree.map(lambda a: a[i], xs))
+            ys_list.append(y_c)
+        return jnp.concatenate(ys_list, axis=1), h.astype(jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, xs)
+    return ys.swapaxes(0, 1).reshape(b, s, d), h_last.astype(jnp.float32)
+
+
+def ssm_apply(p, x, cfg: ModelConfig):
+    """Full-sequence mamba block. x: (B, S, D) -> (out (B, S, D), state).
+
+    ``state`` matches :func:`ssm_decode_step`'s format so prefill can hand
+    directly into decode."""
+    chunk = cfg.ssm_chunk
+    di, dr, ds = cfg.d_inner, cfg.ssm_dt_rank, cfg.ssm_state
+    k = cfg.ssm_conv
+    uz = x @ p["in_proj"]
+    u_raw, z = jnp.split(uz, 2, axis=-1)
+    u_raw = u_raw.astype(jnp.float32)
+    u = jax.nn.silu(causal_depthwise_conv(u_raw, p["conv_w"], p["conv_b"]))
+    xdbc = u.astype(x.dtype) @ p["x_proj"]
+    dt_low = xdbc[..., :dr].astype(jnp.float32)
+    B_mat = xdbc[..., dr:dr + ds].astype(jnp.float32)
+    C_mat = xdbc[..., dr + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_last = ssm_scan(u, dt, B_mat, C_mat, A, chunk=chunk,
+                         unroll=cfg.ssm_unroll,
+                         scan_dtype=jnp.dtype(cfg.ssm_scan_dtype))
+    y = y + p["D"] * u
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # conv state = last K-1 raw (pre-conv) inputs, as consumed by conv_step
+    s_len = u_raw.shape[1]
+    if s_len >= k - 1:
+        conv_state = u_raw[:, s_len - (k - 1):, :]
+    else:
+        conv_state = jnp.pad(u_raw, ((0, 0), (k - 1 - s_len, 0), (0, 0)))
+    state = {"h": h_last, "conv": conv_state}
+    return (y.astype(x.dtype)) @ p["out_proj"], state
+
+
+def ssm_decode_step(p, x_t, state, cfg: ModelConfig):
+    """One-token step. x_t: (B, D); state: {"h": (B, d, N), "conv": (B, K-1, d)}.
+    Returns (y_t (B, D), new_state)."""
+    di, dr, ds = cfg.d_inner, cfg.ssm_dt_rank, cfg.ssm_state
+    uz = x_t @ p["in_proj"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    u_c, conv_state = conv_step(u.astype(jnp.float32), state["conv"], p["conv_w"], p["conv_b"])
+    u_c = jax.nn.silu(u_c)
+    xdbc = u_c.astype(x_t.dtype) @ p["x_proj"]
+    dt_low = xdbc[..., :dr].astype(jnp.float32)
+    B_mat = xdbc[..., dr:dr + ds].astype(jnp.float32)
+    C_mat = xdbc[..., dr + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])  # (B, d)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)  # (B, d, N)
+    dBu = dt[..., None] * B_mat[:, None, :] * u_c[..., None]
+    h = dA * state["h"] + dBu
+    y = jnp.einsum("bdn,bn->bd", h, C_mat) + p["D"] * u_c
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(x_t.dtype)) @ p["out_proj"], {"h": h, "conv": conv_state}
+
+
+def ssm_state_shapes(cfg: ModelConfig, batch: int):
+    return {
+        "h": (batch, cfg.d_inner, cfg.ssm_state),
+        "conv": (batch, cfg.ssm_conv - 1, cfg.d_inner),
+    }

@@ -1,0 +1,36 @@
+"""Minimal functional neural-network substrate (no external NN library).
+
+Modules are (init, apply) pairs over plain dict pytrees. Stateful layers
+(BatchNorm) thread an explicit ``state`` collection. This is the substrate
+both for the CoRaiS policy network (paper §IV) and for the LM model zoo.
+"""
+from repro.nn.module import (
+    uniform_init,
+    normal_init,
+    zeros_init,
+    ones_init,
+    split_keys,
+    param_count,
+    tree_size_bytes,
+)
+from repro.nn.layers import (
+    linear_init,
+    linear_apply,
+    mha_init,
+    mha_apply,
+    batchnorm_init,
+    batchnorm_apply,
+    layernorm_init,
+    layernorm_apply,
+    rmsnorm_init,
+    rmsnorm_apply,
+    nonparametric_layernorm,
+)
+
+__all__ = [
+    "uniform_init", "normal_init", "zeros_init", "ones_init", "split_keys",
+    "param_count", "tree_size_bytes",
+    "linear_init", "linear_apply", "mha_init", "mha_apply",
+    "batchnorm_init", "batchnorm_apply", "layernorm_init", "layernorm_apply",
+    "rmsnorm_init", "rmsnorm_apply", "nonparametric_layernorm",
+]

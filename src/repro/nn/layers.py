@@ -1,0 +1,158 @@
+"""Functional layers: Linear, multi-head attention, normalizations.
+
+Used by the CoRaiS policy network (paper §IV eqs 12-17) and, for the norms,
+by the LM model zoo. All `*_init` return dict pytrees; all `*_apply` are
+pure functions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import split_keys, uniform_init
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, in_dim: int, out_dim: int, bias: bool = True, dtype=jnp.float32):
+    kw, kb = jax.random.split(key)
+    p = {"w": uniform_init(kw, (in_dim, out_dim), fan_in=in_dim, dtype=dtype)}
+    if bias:
+        p["b"] = uniform_init(kb, (out_dim,), fan_in=in_dim, dtype=dtype)
+    return p
+
+
+def linear_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Multi-head attention (paper eq 12/14/15 building block)
+# ---------------------------------------------------------------------------
+
+
+def mha_init(key, dim: int, num_heads: int, kv_dim: Optional[int] = None,
+             out_dim: Optional[int] = None, dtype=jnp.float32):
+    """MHA projections. ``kv_dim`` lets the context decoder attend from
+    edge-context vectors (query dim != key/value dim source, eq 15).
+
+    ``num_heads`` is a static property of the module, not a parameter —
+    pass it to :func:`mha_apply` (keeps param pytrees array-only for
+    optimizers/checkpointing)."""
+    kv_dim = kv_dim or dim
+    out_dim = out_dim or dim
+    del num_heads
+    kq, kk, kv, ko = split_keys(key, 4)
+    return {
+        "wq": uniform_init(kq, (dim, out_dim), fan_in=dim, dtype=dtype),
+        "wk": uniform_init(kk, (kv_dim, out_dim), fan_in=kv_dim, dtype=dtype),
+        "wv": uniform_init(kv, (kv_dim, out_dim), fan_in=kv_dim, dtype=dtype),
+        "wo": uniform_init(ko, (out_dim, out_dim), fan_in=out_dim, dtype=dtype),
+    }
+
+
+def mha_apply(p, q_in, kv_in=None, mask=None, *, num_heads: int = 8):
+    """Self-attention if ``kv_in`` is None, else cross-attention.
+
+    q_in: (..., Nq, D); kv_in: (..., Nk, Dkv); mask: broadcastable to
+    (..., H, Nq, Nk), True = keep.
+    """
+    if kv_in is None:
+        kv_in = q_in
+    h = num_heads
+    q = q_in @ p["wq"]
+    k = kv_in @ p["wk"]
+    v = kv_in @ p["wv"]
+    dh = q.shape[-1] // h
+
+    def heads(x):
+        return jnp.moveaxis(x.reshape(*x.shape[:-1], h, dh), -2, -3)
+
+    qh, kh, vh = heads(q), heads(k), heads(v)  # (..., H, N, dh)
+    logits = jnp.einsum("...qd,...kd->...qk", qh, kh) / math.sqrt(dh)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e9)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("...qk,...kd->...qd", attn, vh)
+    out = jnp.moveaxis(out, -3, -2).reshape(*q_in.shape[:-1], h * dh)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm with running stats (Kool-style: stats over batch x nodes)
+# ---------------------------------------------------------------------------
+
+
+def batchnorm_init(dim: int, dtype=jnp.float32):
+    params = {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    state = {"mean": jnp.zeros((dim,), dtype), "var": jnp.ones((dim,), dtype),
+             "count": jnp.zeros((), dtype)}
+    return params, state
+
+
+def batchnorm_apply(params, state, x, *, training: bool, momentum: float = 0.9,
+                    eps: float = 1e-5):
+    """x: (..., dim) — statistics over all leading axes (batch and nodes),
+    matching attention-model practice for BN in encoder sublayers."""
+    if training:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+            "count": state["count"] + 1,
+        }
+    else:
+        # Fall back to batch stats if the layer has never been trained.
+        trained = state["count"] > 0
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.where(trained, state["mean"], jnp.mean(x, axis=axes))
+        var = jnp.where(trained, state["var"], jnp.var(x, axis=axes))
+        new_state = state
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"], new_state
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm family (LM zoo)
+# ---------------------------------------------------------------------------
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["bias"]
+
+
+def nonparametric_layernorm(x, eps: float = 1e-5):
+    """OLMo-style LN without learnable parameters (arXiv:2402.00838)."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    return (y * p["scale"]).astype(dtype)

@@ -1,0 +1,44 @@
+"""Parameter-tree utilities shared by all functional modules."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp arrays
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+def uniform_init(key: jax.Array, shape: tuple[int, ...], fan_in: int | None = None,
+                 dtype=jnp.float32) -> jax.Array:
+    """Paper §V.A init: Uniform(-1/sqrt(d), 1/sqrt(d)) with d the input dim."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) == 1 else shape[-2]
+    bound = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, dtype, minval=-bound, maxval=bound)
+
+
+def normal_init(key: jax.Array, shape: tuple[int, ...], stddev: float = 0.02,
+                dtype=jnp.float32) -> jax.Array:
+    return stddev * jax.random.normal(key, shape, dtype)
+
+
+def zeros_init(shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def tree_size_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))

@@ -1,0 +1,19 @@
+"""Optimizers and gradient utilities (pure JAX, no optax in this container)."""
+from repro.optim.adam import adam_init, adam_update, AdamConfig
+from repro.optim.adafactor import adafactor_init, adafactor_update, AdafactorConfig
+from repro.optim.schedule import warmup_cosine, constant_lr
+from repro.optim.grad_utils import (
+    clip_by_global_norm,
+    global_norm,
+    quantize_int8,
+    dequantize_int8,
+    compressed_psum,
+)
+
+__all__ = [
+    "adam_init", "adam_update", "AdamConfig",
+    "adafactor_init", "adafactor_update", "AdafactorConfig",
+    "warmup_cosine", "constant_lr",
+    "clip_by_global_norm", "global_norm",
+    "quantize_int8", "dequantize_int8", "compressed_psum",
+]

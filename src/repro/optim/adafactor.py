@@ -1,0 +1,82 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+For >=2-D parameters the second moment is stored as row/col factors,
+cutting optimizer state from 2x-fp32 to ~0 extra vs. params. Used by the
+100B+ arch configs (mistral-large-123b, llama3-405b, mixtral-8x22b) so the
+single-pod (256-chip) training dry-run fits HBM (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float | Callable = 1e-2
+    decay: float = 0.8          # beta2 hat: 1 - step^-decay schedule
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+
+    def resolve_lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+
+def _factored(shape, cfg) -> bool:
+    return len(shape) >= 2 and shape[-1] >= cfg.min_dim_size_to_factor \
+        and shape[-2] >= cfg.min_dim_size_to_factor
+
+
+def adafactor_init(params, cfg: AdafactorConfig):
+    def slot(p):
+        if _factored(p.shape, cfg):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(slot, params,
+            is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(params, grads, opt_state, cfg: AdafactorConfig):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr = cfg.resolve_lr(step)
+
+    def upd(p, g, slot):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.eps1
+        if "vr" in slot:
+            vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom_r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+            precond = g * jax.lax.rsqrt(denom_r[..., None]) * jax.lax.rsqrt(vc[..., None, :])
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * slot["v"] + (1 - beta2) * g2
+            precond = g * jax.lax.rsqrt(v)
+            new_slot = {"v": v}
+        # update clipping (RMS of the preconditioned update)
+        rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + 1e-30)
+        precond = precond / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        scale = jnp.maximum(cfg.eps2, jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))))
+        delta = lr * scale * precond
+        if cfg.weight_decay:
+            delta = delta + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), new_slot
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"step": step, "v": treedef.unflatten([o[1] for o in out])})

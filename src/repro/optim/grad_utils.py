@@ -1,0 +1,51 @@
+"""Gradient utilities: global-norm clipping and int8 gradient compression.
+
+``compressed_psum`` implements the classic distributed-optimization trick of
+quantizing gradients to int8 (per-tensor absmax scale) before the cross-pod
+all-reduce, then dequantizing: 4x less ICI/DCN traffic on the slowest link.
+It is exposed as an opt-in knob in TrainConfig (cross-pod axis only; the
+within-pod reduction stays full precision).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def quantize_int8(x: jax.Array):
+    """Per-tensor absmax int8 quantization. Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, num_shards: int):
+    """int8-compressed all-reduce over ``axis_name`` (inside shard_map).
+
+    Each participant quantizes locally; int8 payloads are summed in int32 to
+    avoid overflow (num_shards <= 2**24 safe); scales are maxed so the shared
+    dequantization grid is conservative. Mean-preserving up to quantization
+    error (bounded by scale/2 per element per shard).
+    """
+    q, scale = quantize_int8(x)
+    scale = jax.lax.pmax(scale, axis_name)
+    # Requantize against the shared scale so summation is coherent.
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return (total.astype(jnp.float32) * scale).astype(x.dtype)

@@ -1,0 +1,21 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(value: float):
+    def f(step):
+        return jnp.asarray(value, jnp.float32)
+    return f
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor_frac: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f

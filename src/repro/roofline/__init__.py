@@ -1,0 +1,5 @@
+from repro.roofline.hw import HW
+from repro.roofline.hlo_parse import collective_wire_bytes
+from repro.roofline.analysis import analyze_compiled, roofline_terms
+
+__all__ = ["HW", "collective_wire_bytes", "analyze_compiled", "roofline_terms"]

@@ -1,0 +1,160 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = per_device_HLO_FLOPs / peak_FLOP/s
+    memory term     = per_device_HLO_bytes / HBM_bw
+    collective term = per_device_wire_bytes / ICI_link_bw
+
+``compiled.cost_analysis()`` on an SPMD executable reports per-device values
+(the partitioned module is a per-device program), so no further division by
+chip count is needed. MODEL_FLOPS is the analytic useful work (6*N*D for
+training; 2*N_active*tokens for inference, + exact attention FLOPs), giving
+the usefulness ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.roofline.hlo_parse import collective_wire_bytes, count_ops
+from repro.roofline.hw import HW, HWModel
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    wire_bytes_per_device: float
+    collective_ops: dict
+    collective_breakdown: dict
+    temp_bytes_per_device: float
+    arg_bytes_per_device: float
+    out_bytes_per_device: float
+    model_flops: float
+    params_total: float
+    params_active: float
+    compile_seconds: float
+    variant: str = "baseline"
+
+    def terms(self, hw: HWModel = HW) -> dict:
+        t_comp = self.hlo_flops_per_device / hw.peak_flops_bf16
+        t_mem = self.hlo_bytes_per_device / hw.hbm_bw
+        # Floor: every argument byte (sharded params/opt/cache/inputs) read
+        # once + outputs written once. The HLO bytes-accessed metric above
+        # additionally counts CPU-backend converts/layout copies that a TPU
+        # lowering fuses away, so it is an upper bound (see EXPERIMENTS.md
+        # §Roofline notes).
+        t_mem_floor = ((self.arg_bytes_per_device + self.out_bytes_per_device)
+                       / hw.hbm_bw)
+        t_coll = self.wire_bytes_per_device / hw.ici_link_bw
+        dominant = max(
+            (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+            key=lambda kv: kv[1],
+        )[0]
+        total_hlo_flops = self.hlo_flops_per_device * self.chips
+        return {
+            "compute_s": t_comp,
+            "memory_s": t_mem,
+            "memory_floor_s": t_mem_floor,
+            "collective_s": t_coll,
+            "dominant": dominant,
+            "bound_s": max(t_comp, t_mem, t_coll),
+            "useful_flop_ratio": (self.model_flops / total_hlo_flops
+                                  if total_hlo_flops else 0.0),
+            "roofline_fraction": (
+                t_comp / max(t_comp, t_mem, t_coll)
+                if max(t_comp, t_mem, t_coll) > 0 else 0.0),
+            "model_mfu_bound": (
+                (self.model_flops / (self.chips * hw.peak_flops_bf16))
+                / max(t_comp, t_mem, t_coll)
+                if max(t_comp, t_mem, t_coll) > 0 else 0.0),
+        }
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["terms"] = self.terms()
+        return d
+
+
+def _param_counts(cfg: ModelConfig, params_tree) -> tuple[float, float]:
+    import jax
+
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if any("moe" in str(getattr(p, "key", "")) for p in path) and \
+           not any("router" in str(getattr(p, "key", "")) for p in path):
+            expert += n
+    active = total
+    if cfg.num_experts:
+        active = total - expert * (cfg.num_experts - cfg.experts_per_token) / cfg.num_experts
+    return float(total), float(active)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, params_active: float) -> float:
+    """Analytic useful FLOPs per step: matmul term + exact attention term."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0  # fwd 2 + bwd 4
+        ctx = shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+        ctx = shape.seq_len
+    else:  # decode: one token per sequence against a seq_len context
+        tokens = shape.global_batch
+        mult = 2.0
+        ctx = shape.seq_len
+    core = mult * params_active * tokens
+    # attention score+value FLOPs: 4 * tokens * ctx_avg * H * hd per layer
+    if cfg.family != "ssm" and cfg.num_heads:
+        win = cfg.sliding_window
+        if shape.kind == "decode":
+            ctx_avg = min(ctx, win) if win else ctx
+        else:
+            ctx_avg = ctx / 2 if win is None else min(win, ctx / 2)
+        attn = (mult / 2.0) * 4 * tokens * ctx_avg * cfg.num_heads * cfg.head_dim \
+            * cfg.num_layers
+        core += attn
+    return core
+
+
+def analyze_compiled(compiled, cfg: ModelConfig, shape: ShapeConfig,
+                     mesh_name: str, chips: int, params_tree,
+                     compile_seconds: float, variant: str = "baseline") -> CellReport:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    wire = collective_wire_bytes(hlo)
+    total, active = _param_counts(cfg, params_tree)
+    return CellReport(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops_per_device=float(ca.get("flops", 0.0)),
+        hlo_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes_per_device=float(wire.get("_total", 0.0)),
+        collective_ops=count_ops(hlo),
+        collective_breakdown={k: v for k, v in wire.items() if not k.startswith("_")},
+        temp_bytes_per_device=float(getattr(ma, "temp_size_in_bytes", 0)),
+        arg_bytes_per_device=float(getattr(ma, "argument_size_in_bytes", 0)),
+        out_bytes_per_device=float(getattr(ma, "output_size_in_bytes", 0)),
+        model_flops=model_flops(cfg, shape, active),
+        params_total=total,
+        params_active=active,
+        compile_seconds=compile_seconds,
+        variant=variant,
+    )
+
+
+def roofline_terms(report: CellReport, hw: Optional[HWModel] = None) -> dict:
+    return report.terms(hw or HW)

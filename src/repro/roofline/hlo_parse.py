@@ -1,0 +1,94 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+``compiled.as_text()`` is the per-device program; result types of collective
+ops give payload sizes and ``replica_groups`` gives the group size n. Wire
+bytes per device follow ring-algorithm accounting:
+
+    all-gather:          result * (n-1)/n       (each shard traverses ring)
+    reduce-scatter:      result * (n-1)         (input = result*n)
+    all-reduce:          result * 2*(n-1)/n     (RS + AG)
+    all-to-all:          result * (n-1)/n
+    collective-permute:  result                 (point-to-point)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _types_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+def collective_wire_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: wire_bytes_per_device} + '_total' and '_payload'."""
+    out = defaultdict(float)
+    payload = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_types, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # count the -start, not the -done
+        size = _types_bytes(result_types)
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            wire = size * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = size * (n - 1)
+        elif op == "all-reduce":
+            wire = size * 2 * (n - 1) / n
+        elif op == "all-to-all":
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = size
+        out[op] += wire
+        payload[op] += size
+    out["_total"] = sum(v for k, v in out.items() if not k.startswith("_"))
+    out["_payload"] = sum(payload.values())
+    return dict(out)
+
+
+def count_ops(hlo_text: str) -> dict:
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m and "-done(" not in line:
+            counts[m.group(2)] += 1
+    return dict(counts)

@@ -1,0 +1,15 @@
+"""Target-hardware model (TPU v5e-like, constants from the task spec)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HWModel:
+    name: str = "tpu-v5e-like"
+    peak_flops_bf16: float = 197e12      # FLOP/s per chip
+    hbm_bw: float = 819e9                # bytes/s per chip
+    ici_link_bw: float = 50e9            # bytes/s per link
+    hbm_bytes: float = 16e9              # capacity per chip
+    vmem_bytes: float = 128 * 1024**2
+
+
+HW = HWModel()

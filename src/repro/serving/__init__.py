@@ -1,0 +1,6 @@
+from repro.serving.controller import CentralController, SchedulerChoice
+from repro.serving.simulator import MultiEdgeSim, SimConfig
+from repro.serving.edge import SimEdge
+
+__all__ = ["CentralController", "SchedulerChoice", "MultiEdgeSim", "SimConfig",
+           "SimEdge"]

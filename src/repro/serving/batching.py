@@ -1,0 +1,150 @@
+"""Continuous batching of dispatched requests into a real LM backend.
+
+``LMEdgeBackend`` runs an actual (reduced-config) model on this host:
+prefill on admission, then decode steps over the active batch, admitting
+queued requests into free lanes between steps (vLLM-style continuous
+batching, TPU-friendly fixed batch shape). Measured (prompt_tokens,
+latency) pairs feed the edge's PhiEstimator — the live demonstration that
+LM serving is an *ideal service* in the paper's sense (runtime affine in
+input size), closing the loop between the serving substrate and the
+paper's state-evaluation model. Used by examples/serve_multi_edge.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.state import PhiEstimator
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class LaneState:
+    rid: int = -1
+    remaining: int = 0
+    generated: int = 0
+
+
+class LMEdgeBackend:
+    """One edge's model server: ``lanes`` concurrent sequences (the edge's
+    service-replica count), fixed max_seq ring cache per lane."""
+
+    def __init__(self, cfg: ModelConfig, params, lanes: int = 4,
+                 max_seq: int = 128, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.lanes = lanes
+        self.max_seq = max_seq
+        self.phi = PhiEstimator()
+        self._lane_states = [LaneState() for _ in range(lanes)]
+        self._queue: list[tuple[int, np.ndarray, int]] = []  # rid, prompt, gen_len
+        self._rng = np.random.default_rng(seed)
+        self.finished: dict[int, int] = {}  # rid -> generated tokens
+
+        self._cache = lm.init_cache(cfg, lanes, max_seq)
+        self._tokens = jnp.zeros((lanes,), jnp.int32)
+
+        def _decode(params, cache, token):
+            return lm.decode_step(params, cache, {"token": token}, cfg, 1)
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+        def _prefill_one(params, tokens):
+            return lm.prefill(params, {"tokens": tokens}, cfg, 1,
+                              max_seq=max_seq)
+
+        self._prefill = jax.jit(_prefill_one)
+
+    # -- admission --------------------------------------------------------
+
+    def submit(self, rid: int, prompt_len: int, gen_len: int) -> None:
+        prompt = self._rng.integers(
+            0, self.cfg.vocab_size, size=(1, max(prompt_len, 2))).astype(np.int32)
+        self._queue.append((rid, prompt, gen_len))
+
+    def _admit(self) -> None:
+        for lane, st in enumerate(self._lane_states):
+            if st.remaining > 0 or not self._queue:
+                continue
+            rid, prompt, gen_len = self._queue.pop(0)
+            t0 = time.perf_counter()
+            cache1, logits = self._prefill(self.params, jnp.asarray(prompt))
+            jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
+            self.phi.observe(prompt.shape[1], dt)  # ideal-service fit
+            # splice lane 'lane' of the batch cache from the single-seq cache
+            self._cache = _splice_cache(self._cache, cache1, lane)
+            self._tokens = self._tokens.at[lane].set(
+                int(jnp.argmax(logits[0])) % self.cfg.vocab_size)
+            self._lane_states[lane] = LaneState(rid=rid, remaining=gen_len)
+
+    # -- decode loop --------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + one decode step over the whole batch. Returns #active."""
+        self._admit()
+        active = [i for i, s in enumerate(self._lane_states) if s.remaining > 0]
+        if not active:
+            return 0
+        self._cache, logits = self._decode(self.params, self._cache, self._tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._tokens = jnp.where(
+            jnp.asarray([s.remaining > 0 for s in self._lane_states]),
+            nxt % self.cfg.vocab_size, self._tokens)
+        for i in active:
+            st = self._lane_states[i]
+            st.remaining -= 1
+            st.generated += 1
+            if st.remaining == 0:
+                self.finished[st.rid] = st.generated
+                self._lane_states[i] = LaneState()
+        return len(active)
+
+    def drain(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self._queue or any(s.remaining for s in self._lane_states)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+
+
+def _splice_cache(batch_cache, one_cache, lane: int):
+    """Insert a single-sequence cache into lane ``lane`` of a batched cache.
+
+    Handles differing sequence capacity (pads/crops the window axis)."""
+    out = dict(batch_cache)
+    out["pos"] = batch_cache["pos"].at[lane].set(one_cache["pos"][0])
+    if "slot_pos" in batch_cache:
+        w_b = batch_cache["slot_pos"].shape[1]
+        sp = _fit_axis(one_cache["slot_pos"], w_b, axis=1, fill=-1)
+        out["slot_pos"] = batch_cache["slot_pos"].at[lane].set(sp[0])
+    lay = dict(batch_cache["layers"])
+    for k_ in batch_cache["layers"]:
+        b = batch_cache["layers"][k_]
+        o = one_cache["layers"][k_]
+        if k_ in ("k", "v"):
+            o = _fit_axis(o, b.shape[2], axis=2, fill=0)
+        lay[k_] = b.at[:, lane].set(o[:, 0])
+    out["layers"] = lay
+    if "enc_out" in batch_cache:
+        out["enc_out"] = batch_cache["enc_out"].at[lane].set(one_cache["enc_out"][0])
+    return out
+
+
+def _fit_axis(x, size: int, axis: int, fill=0):
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    if cur > size:
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(cur - size, cur)
+        return x[tuple(idx)]
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, size - cur)
+    return jnp.pad(x, pad, constant_values=fill)

@@ -1,0 +1,102 @@
+"""Central controller (paper Fig. 2): snapshot -> schedule -> dispatch.
+
+Scheduling backends: the trained CoRaiS policy (greedy or sampling decode),
+the heuristics (local / random / greedy insertion), or the ILS reference.
+The controller is scheduler-agnostic: every backend consumes the same
+frozen instance produced by core.state.snapshot_instance, so swapping the
+paper's learned scheduler against baselines is a one-line config change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decode import greedy_decode, sampling_decode
+from repro.core.heuristics import solve_greedy, solve_local, solve_random
+from repro.core.policy import PolicyConfig, corais_apply
+from repro.core.state import QueuedRequest, snapshot_instance
+
+SchedulerChoice = ("corais", "corais-sample", "greedy", "local", "random", "ils")
+
+
+@dataclasses.dataclass
+class CentralController:
+    scheduler: str = "greedy"
+    policy_params: Optional[dict] = None
+    policy_state: Optional[dict] = None
+    policy_cfg: Optional[PolicyConfig] = None
+    sample_n: int = 128
+    seed: int = 0
+    # pad snapshots so the jitted policy sees a constant shape
+    q_pad: int = 0
+    z_pad: int = 64
+
+    def __post_init__(self):
+        self._key = jax.random.PRNGKey(self.seed)
+        self._forward = None
+        self.last_decision_time = 0.0
+
+    def _policy_assign(self, inst) -> np.ndarray:
+        if self._forward is None:
+            cfg = self.policy_cfg
+
+            @jax.jit
+            def forward(jinst):
+                lp, _ = corais_apply(self.policy_params, self.policy_state,
+                                     jinst, cfg, training=False)
+                return lp
+
+            self._forward = forward
+        jinst = jax.tree.map(jnp.asarray, inst)
+        lp = self._forward(jinst)
+        if self.scheduler == "corais-sample":
+            self._key, sub = jax.random.split(self._key)
+            assign, _ = sampling_decode(sub, jinst, lp, self.sample_n)
+        else:
+            assign = greedy_decode(lp)
+        return np.asarray(jax.block_until_ready(assign))
+
+    def schedule(self, edges, pending: Sequence[QueuedRequest], w: np.ndarray,
+                 ct: float) -> list[tuple[QueuedRequest, int]]:
+        """Returns [(request, execution_edge)] for this round (CC step iv)."""
+        if not pending:
+            return []
+        alive = [e for e in edges if e.alive]
+        alive_ids = [e.edge_id for e in alive]
+        id_map = {aid: i for i, aid in enumerate(alive_ids)}
+        w_alive = w[np.ix_(alive_ids, alive_ids)]
+        # remap request sources onto the alive-edge index space
+        remapped = []
+        for r in pending:
+            rr = dataclasses.replace(r)
+            rr.source_edge = id_map.get(r.source_edge, 0)
+            remapped.append(rr)
+        zp = max(self.z_pad, len(remapped))
+        qp = max(self.q_pad, len(alive))
+        inst = snapshot_instance([e.state for e in alive], remapped, w_alive,
+                                 ct, q_pad=qp, z_pad=zp, w_global=w)
+        t0 = time.perf_counter()
+        if self.scheduler in ("corais", "corais-sample"):
+            assign = self._policy_assign(inst)
+        elif self.scheduler == "greedy":
+            assign = solve_greedy(inst)
+        elif self.scheduler == "local":
+            assign = solve_local(inst)
+        elif self.scheduler == "random":
+            assign = solve_random(inst, 100, seed=self.seed)
+        elif self.scheduler == "ils":
+            from repro.core.heuristics import solve_ils
+            assign = solve_ils(inst, budget_s=1.0, seed=self.seed)
+        else:
+            raise ValueError(self.scheduler)
+        self.last_decision_time = time.perf_counter() - t0
+        out = []
+        for i, r in enumerate(pending):
+            exec_alive_idx = int(assign[i]) % max(len(alive), 1)
+            out.append((r, alive_ids[exec_alive_idx]))
+        return out

@@ -1,0 +1,88 @@
+"""Edge executors for the multi-edge cooperative serving runtime.
+
+``SimEdge`` models one edge: hidden true performance (phi coefficients the
+scheduler never sees), zeta parallel service replicas (the paper's
+Docker/K8s replica observation, §III-C), the five request queues of Fig. 5,
+and an online :class:`PhiEstimator` fitted purely from local history —
+exactly the paper's system-level state evaluation model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.core.state import EdgeServiceState, PhiEstimator, QueuedRequest
+
+
+@dataclasses.dataclass
+class SimEdge:
+    edge_id: int
+    coords: tuple
+    true_a: float                 # hidden: runtime = true_a * size + true_b
+    true_b: float
+    replicas: int
+    rng: np.random.Generator
+    noise: float = 0.02
+    speed_factor: float = 1.0     # >1 = straggler (slowed edge)
+    alive: bool = True
+
+    def __post_init__(self):
+        self.state = EdgeServiceState(
+            edge_id=self.edge_id,
+            coords=self.coords,
+            phi=PhiEstimator(a=1.0, b=0.0),
+            replicas=self.replicas,
+        )
+        # replica lanes: next-free times
+        self._lanes = [0.0] * self.replicas
+        self.completed: list[QueuedRequest] = []
+        self.inflight: dict[int, QueuedRequest] = {}
+
+    # -- execution -----------------------------------------------------
+
+    def true_runtime(self, size: float) -> float:
+        jitter = 1.0 + self.noise * float(self.rng.standard_normal())
+        return max(1e-6, (self.true_a * size + self.true_b)
+                   * max(jitter, 0.1) * self.speed_factor)
+
+    def start_executable(self, now: float) -> list[tuple[float, QueuedRequest]]:
+        """Pop requests from Q^le onto free replica lanes.
+
+        Returns (finish_time, request) events. The lane model reproduces
+        eq (1)'s zeta-way parallel service."""
+        events = []
+        while self.state.q_le and min(self._lanes) <= now + 1e-12 and self.alive:
+            lane = int(np.argmin(self._lanes))
+            req = self.state.q_le.pop(0)
+            rt = self.true_runtime(req.data_size)
+            start = max(now, self._lanes[lane])
+            self._lanes[lane] = start + rt
+            req.start_time = start
+            req.finish_time = start + rt
+            # local learning for phi (paper §III-C1: only local history)
+            self.state.phi.observe(req.data_size, rt)
+            self.inflight[req.rid] = req
+            events.append((req.finish_time, req))
+        return events
+
+    def next_free(self) -> float:
+        return min(self._lanes)
+
+    def fail(self) -> list[QueuedRequest]:
+        """Edge failure: return every unfinished request (queued AND mid-
+        execution) for re-dispatch; replica lanes die with the edge."""
+        self.alive = False
+        orphans = (list(self.state.q_le) + list(self.state.q_in)
+                   + list(self.state.q_r) + list(self.inflight.values()))
+        self.state.q_le.clear()
+        self.state.q_in.clear()
+        self.state.q_r.clear()
+        self.inflight.clear()
+        return orphans
+
+    def recover(self, now: float) -> None:
+        self.alive = True
+        self._lanes = [now] * self.replicas

@@ -1,0 +1,202 @@
+"""Event-driven multi-edge cooperative serving simulator.
+
+Implements the seven scheduling-process steps of paper Fig. 2 on a virtual
+cluster: clients submit to their local edge (Q^r), the central controller
+schedules each round from request *briefs* + evaluated edge states, data
+transfers cost C_t * size * distance (eq 2/7 semantics), zeta replica lanes
+execute in parallel, and completions flow to Q^F. Supports edge failures
+(orphaned requests re-enter the controller pool — fault tolerance) and
+stragglers (a slowed edge is routed around via workload perception, paper
+§V-B3/WP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.core.state import QueuedRequest
+from repro.serving.controller import CentralController
+from repro.serving.edge import SimEdge
+
+
+@dataclasses.dataclass
+class SimConfig:
+    num_edges: int = 5
+    replicas_high: int = 4
+    ct: float = 1.0
+    round_interval: float = 0.25
+    seed: int = 0
+    phi_low: float = 0.2
+    phi_high: float = 1.0
+    exec_noise: float = 0.02
+
+
+class MultiEdgeSim:
+    def __init__(self, cfg: SimConfig, controller: CentralController):
+        self.cfg = cfg
+        self.cc = controller
+        rng = np.random.default_rng(cfg.seed)
+        self.rng = rng
+        coords = rng.uniform(0, 1, size=(cfg.num_edges, 2))
+        self.w = np.linalg.norm(coords[:, None] - coords[None, :], axis=-1)
+        self.edges = [
+            SimEdge(
+                edge_id=i,
+                coords=tuple(coords[i]),
+                true_a=float(rng.uniform(cfg.phi_low, cfg.phi_high)),
+                true_b=float(rng.uniform(0.0, 0.1)),
+                replicas=int(rng.integers(1, cfg.replicas_high + 1)),
+                rng=np.random.default_rng((cfg.seed, i)),
+                noise=cfg.exec_noise,
+            )
+            for i in range(cfg.num_edges)
+        ]
+        self.now = 0.0
+        self._events: list = []   # heap of (time, seq, kind, payload)
+        self._seq = 0
+        self._rid = 0
+        self.metrics_rows: list[dict] = []
+
+    # -- client API ------------------------------------------------------
+
+    def submit(self, edge_id: int, data_size: float, t: Optional[float] = None):
+        req = QueuedRequest(rid=self._rid, data_size=float(data_size),
+                            source_edge=edge_id,
+                            submit_time=self.now if t is None else t)
+        self._rid += 1
+        self._push(req.submit_time, "arrival", req)
+        return req
+
+    def fail_edge(self, edge_id: int, t: float):
+        self._push(t, "fail", edge_id)
+
+    def recover_edge(self, edge_id: int, t: float):
+        self._push(t, "recover", edge_id)
+
+    def set_straggler(self, edge_id: int, factor: float, t: float):
+        self._push(t, "straggle", (edge_id, factor))
+
+    # -- internals ---------------------------------------------------------
+
+    def _push(self, t, kind, payload):
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _round(self):
+        """One CC scheduling round over all pending briefs (Fig. 2 iii-vi)."""
+        pending = []
+        for e in self.edges:
+            pending.extend(e.state.q_r)
+            e.state.q_r = []
+        if pending:
+            for req, target in self.cc.schedule(self.edges, pending, self.w,
+                                                self.cfg.ct):
+                req.exec_edge = target
+                src, dst = self.edges[req.source_edge], self.edges[target]
+                if target == req.source_edge:
+                    dst.state.q_le.append(req)
+                else:
+                    src.state.q_out.append(req)
+                    dst.state.q_in.append(req)
+                    dt = self.cfg.ct * req.data_size * self.w[req.source_edge, target]
+                    self._push(self.now + dt, "transfer_done", req)
+        # kick executions
+        for e in self.edges:
+            for ft, req in e.start_executable(self.now):
+                self._push(ft, "exec_done", (req, e.edge_id, ft))
+
+    def run(self, until: float):
+        self._push(self.now + 1e-9, "round", None)
+        while self._events and self._events[0][0] <= until:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            if kind == "arrival":
+                e = self.edges[payload.source_edge]
+                if e.alive:
+                    e.state.q_r.append(payload)
+                else:  # client fails over to the nearest alive edge
+                    order = np.argsort(self.w[payload.source_edge])
+                    for cand in order:
+                        if self.edges[cand].alive:
+                            payload.source_edge = int(cand)
+                            self.edges[cand].state.q_r.append(payload)
+                            break
+            elif kind == "transfer_done":
+                req = payload
+                dst = self.edges[req.exec_edge]
+                if not dst.alive:
+                    continue  # failure path re-queues via fail()
+                if req in dst.state.q_in:
+                    dst.state.q_in.remove(req)
+                    if req in self.edges[req.source_edge].state.q_out:
+                        self.edges[req.source_edge].state.q_out.remove(req)
+                    dst.state.q_le.append(req)
+                    for ft, r2 in dst.start_executable(self.now):
+                        self._push(ft, "exec_done", (r2, dst.edge_id, ft))
+            elif kind == "exec_done":
+                req, eid, ft = payload
+                e = self.edges[eid]
+                # stale-event guard: the request may have been orphaned by a
+                # failure and re-dispatched elsewhere
+                stale = (not e.alive or req.rid not in e.inflight
+                         or req.exec_edge != eid
+                         or abs(req.finish_time - ft) > 1e-12)
+                if not stale:
+                    e.inflight.pop(req.rid)
+                    e.state.q_f.append(req)
+                    e.completed.append(req)
+                    self.metrics_rows.append({
+                        "rid": req.rid,
+                        "edge": eid,
+                        "response": req.finish_time - req.submit_time,
+                        "transferred": eid != req.source_edge,
+                    })
+                    for ft2, r2 in e.start_executable(self.now):
+                        self._push(ft2, "exec_done", (r2, e.edge_id, ft2))
+            elif kind == "fail":
+                orphans = self.edges[payload].fail()
+                # fault tolerance: orphaned requests re-enter the pool at the
+                # nearest alive edge (their data is re-sent from the source)
+                for req in orphans:
+                    req.exec_edge = -1
+                    src = self.edges[req.source_edge]
+                    (src if src.alive else self._nearest_alive(req)).state.q_r.append(req)
+            elif kind == "recover":
+                self.edges[payload].recover(self.now)
+            elif kind == "straggle":
+                eid, factor = payload
+                self.edges[eid].speed_factor = factor
+            elif kind == "round":
+                self._round()
+                self._push(self.now + self.cfg.round_interval, "round", None)
+        self.now = until
+        return self.metrics()
+
+    def _nearest_alive(self, req):
+        order = np.argsort(self.w[req.source_edge])
+        for cand in order:
+            if self.edges[cand].alive:
+                req.source_edge = int(cand)
+                return self.edges[cand]
+        raise RuntimeError("no alive edges")
+
+    def metrics(self) -> dict:
+        rows = self.metrics_rows
+        if not rows:
+            return {"completed": 0}
+        resp = np.asarray([r["response"] for r in rows])
+        per_edge = {e.edge_id: sum(1 for r in rows if r["edge"] == e.edge_id)
+                    for e in self.edges}
+        return {
+            "completed": len(rows),
+            "mean_response": float(resp.mean()),
+            "p50_response": float(np.percentile(resp, 50)),
+            "p95_response": float(np.percentile(resp, 95)),
+            "max_response": float(resp.max()),
+            "transferred_frac": float(np.mean([r["transferred"] for r in rows])),
+            "per_edge_completed": per_edge,
+            "scheduler_decision_s": self.cc.last_decision_time,
+        }

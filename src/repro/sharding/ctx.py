@@ -1,0 +1,71 @@
+"""Activation-sharding context.
+
+Model code stays shard-agnostic; the launchers install a context and the
+model calls :func:`constrain` at a handful of boundaries (embed output,
+residual stream, logits). Outside a context every call is a no-op, so unit
+tests and single-device smoke runs never touch mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: jax.sharding.Mesh
+    dp_axes: Tuple[str, ...]        # batch axes, e.g. ("data",) or ("pod","data")
+    tp_axis: str = "model"
+    fsdp_axis: str = "data"
+    seq_shard: bool = False         # sequence parallelism on the residual
+    batch_divisible: bool = True    # False when global batch < dp size
+
+    @property
+    def dp(self):
+        return self.dp_axes if self.batch_divisible else None
+
+
+def current() -> Optional[ShardCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: ShardCtx):
+    prev = current()
+    _TLS.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def _spec_for(kind: str, ctx: ShardCtx, ndim: int) -> P:
+    dp = ctx.dp
+    seq = ctx.tp_axis if ctx.seq_shard else None
+    if kind == "residual":        # (B, S, D)
+        return P(dp, seq, None)
+    if kind == "tokens":          # (B, S)
+        return P(dp, None)
+    if kind == "logits":          # (B, S, V) or (B, V)
+        if ndim == 2:
+            return P(dp, ctx.tp_axis)
+        return P(dp, None, ctx.tp_axis)
+    if kind == "decode_x":        # (B, D)
+        return P(dp, None)
+    raise ValueError(kind)
+
+
+def constrain(x, kind: str):
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = _spec_for(kind, ctx, x.ndim)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,230 @@
+"""PartitionSpec rules for every parameter / optimizer / input / cache leaf.
+
+Strategy (DESIGN.md §5): FSDP over the ``data`` axis + tensor parallelism
+over ``model``; batch over ("pod", "data"); KV caches shard sequence over
+``model`` (flash-decode style — works for any kv_head count); MoE experts
+replicated on the expert dim, TP on d_ff, FSDP on d_model.
+
+Every rule checks divisibility against the actual mesh and falls back to
+replication for a non-dividing dim, so a single rule set serves all 10
+architectures (e.g. hymba's 25 heads shard via the flattened H*hd = 1600
+projection dim, which *is* divisible).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def mesh_axes(mesh: Mesh, layout: str = "tp") -> dict:
+    """layout="tp" (default): batch over data(+pod), TP over model.
+    layout="dp": every axis is data parallelism — weights FSDP-sharded over
+    all axes and batch over all axes; zero per-layer TP collectives. The
+    right choice for small models where TP=16 is all overhead (§Perf)."""
+    names = mesh.axis_names
+    if layout == "dp":
+        allax = tuple(names)
+        return {"dp": allax, "fsdp": allax, "tp": None}
+    pod_dp = ("pod", "data") if "pod" in names else ("data",)
+    if layout == "tp-serve":
+        # Serving layout: weights TP-sharded only, REPLICATED over data —
+        # no per-step FSDP all-gathers (the dominant decode collective;
+        # EXPERIMENTS.md §Perf). Requires params/tp_size to fit HBM.
+        return {"dp": pod_dp, "fsdp": None, "tp": "model"}
+    return {"dp": pod_dp, "fsdp": "data", "tp": "model"}
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, dim: int, axis):
+    """axis if it divides dim else None (replicate)."""
+    return axis if axis is not None and dim % _axsize(mesh, axis) == 0 else None
+
+
+def _param_rule(path: str, shape: Tuple[int, ...], mesh: Mesh, ax: dict) -> P:
+    fsdp, tp = ax["fsdp"], ax["tp"]
+    nd = len(shape)
+
+    def spec(*entries):
+        # pad with None for unhandled leading dims (the scan-stacked L axis)
+        pad = (None,) * (nd - len(entries))
+        fitted = tuple(_fit(mesh, shape[len(pad) + i], a) for i, a in enumerate(entries))
+        return P(*(pad + fitted))
+
+    if "embed" in path and "dec_pos" not in path:
+        return spec(tp, fsdp)
+    if "lm_head" in path:
+        return spec(fsdp, tp)
+    if "dec_pos" in path:
+        return P(*(None,) * nd)
+    # attention projections (2-D weights, flattened head dims)
+    attn_tp = tp if ax.get("shard_heads", True) else None
+    if path.endswith("wq") or path.endswith("wk") or path.endswith("wv"):
+        return spec(fsdp, attn_tp)
+    if path.endswith("wo") and ("attn" in path or "xattn" in path):
+        return spec(attn_tp, fsdp)
+    # MoE
+    if "moe" in path:
+        if "router" in path:
+            return spec(fsdp, None)
+        if path.endswith("wg") or path.endswith("wu"):
+            return spec(None, fsdp, tp)
+        if path.endswith("wo"):
+            return spec(None, tp, fsdp)
+    # dense MLP
+    if path.endswith("wg") or path.endswith("wu") or path.endswith("wi"):
+        return spec(fsdp, tp)
+    if path.endswith("wo") or path.endswith("mlp.wo"):
+        return spec(tp, fsdp)
+    # SSM
+    if "in_proj" in path:
+        return spec(fsdp, tp)
+    if "x_proj" in path:
+        return spec(tp, None)
+    if "dt_proj" in path:
+        return spec(None, tp)
+    if "out_proj" in path:
+        return spec(tp, fsdp)
+    if "conv_w" in path:
+        return spec(tp, None)
+    if any(k in path for k in ("conv_b", "dt_bias", "A_log")) or path.endswith("D"):
+        return spec(tp) if nd >= 1 else P()
+    # norms / small leaves: replicated
+    return P(*(None,) * nd)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return ".".join(parts)
+
+
+def param_specs(param_tree, cfg: ModelConfig, mesh: Mesh):
+    """NamedSharding tree matching an (eval_shape'd) parameter tree."""
+    ax = mesh_axes(mesh, getattr(cfg, "layout", "tp"))
+    ax["shard_heads"] = getattr(cfg, "shard_heads", True)
+
+    def leaf(path, x):
+        return NamedSharding(mesh, _param_rule(_path_str(path), x.shape, mesh, ax))
+
+    return jax.tree_util.tree_map_with_path(leaf, param_tree)
+
+
+def opt_state_specs(opt_tree, param_spec_tree, cfg: ModelConfig, mesh: Mesh):
+    """Optimizer slots: adam m/v mirror the param specs; adafactor vr/vc
+    drop the factored dim from the parent's spec; scalars replicate."""
+    ax = mesh_axes(mesh, getattr(cfg, "layout", "tp"))
+    ax["shard_heads"] = getattr(cfg, "shard_heads", True)
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        base = _param_rule(_strip_slot(ps), x.shape, mesh, ax)
+        return NamedSharding(mesh, base)
+
+    def dispatch(path, x):
+        ps = _path_str(path)
+        if ps.endswith("vr") or ps.endswith("vc"):
+            # Factored slots are rank-reduced and tiny relative to adam m/v;
+            # shard the largest dim over fsdp when it divides, else replicate.
+            if x.ndim >= 1:
+                last = _fit(mesh, x.shape[-1], ax["fsdp"])
+                return NamedSharding(mesh, P(*(None,) * (x.ndim - 1), last))
+            return NamedSharding(mesh, P())
+        return leaf(path, x)
+
+    return jax.tree_util.tree_map_with_path(dispatch, opt_tree)
+
+
+def _strip_slot(path: str) -> str:
+    for slot in (".m.", ".v."):
+        if slot in path:
+            _, _, rest = path.partition(slot)
+            return rest
+    for suffix in (".vr", ".vc", ".v"):
+        if path.endswith(suffix):
+            path = path[: -len(suffix)]
+    for prefix in ("m.", "v."):
+        if path.startswith(prefix):
+            path = path[len(prefix):]
+    return path
+
+
+# ---------------------------------------------------------------------------
+# inputs / cache
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes_for(mesh: Mesh, ax: dict, b: int):
+    dp = ax["dp"]
+    return dp if b % _axsize(mesh, dp) == 0 else None
+
+
+def batch_specs(batch_tree, cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    ax = mesh_axes(mesh, getattr(cfg, "layout", "tp"))
+    dp = _batch_axes_for(mesh, ax, shape.global_batch)
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        if ps.endswith("positions") and x.ndim >= 2 and x.shape[0] == 3:
+            rest = (None,) * (x.ndim - 2)
+            return NamedSharding(mesh, P(None, dp, *rest))
+        rest = (None,) * (x.ndim - 1)
+        return NamedSharding(mesh, P(dp, *rest))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_tree)
+
+
+def cache_specs(cache_tree, cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """KV caches: (L, B, W, KV, hd) -> P(None, dp, tp, None, None): batch
+    over data, *sequence* over model (flash-decode). SSM states: d_inner
+    over model. Falls back to replication on non-dividing dims (B=1)."""
+    ax = mesh_axes(mesh, getattr(cfg, "layout", "tp"))
+    dp = _batch_axes_for(mesh, ax, shape.global_batch)
+    tp = ax["tp"]
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        if ps.endswith(".k") or ps.endswith(".v"):
+            w = x.shape[2]
+            seq_ax = _fit(mesh, w, tp)
+            return NamedSharding(mesh, P(None, dp, seq_ax, None, None))
+        if ps.endswith(".h"):  # (L, B, d_inner, N)
+            return NamedSharding(mesh, P(None, dp, _fit(mesh, x.shape[2], tp), None))
+        if ps.endswith(".conv"):  # (L, B, K-1, d_inner)
+            return NamedSharding(mesh, P(None, dp, None, _fit(mesh, x.shape[3], tp)))
+        if ps.endswith("slot_pos"):  # (B, W)
+            return NamedSharding(mesh, P(dp, _fit(mesh, x.shape[1], tp)))
+        if ps.endswith("enc_out"):  # (B, S_enc, D)
+            return NamedSharding(mesh, P(dp, None, None))
+        if ps.endswith("pos"):
+            return NamedSharding(mesh, P(dp))
+        rest = (None,) * (x.ndim - 1)
+        return NamedSharding(mesh, P(dp, *rest))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda x: NamedSharding(mesh, P(*(None,) * x.ndim)), tree)

@@ -1,0 +1,9 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — tests must see the
+real single-device view; only the dry-run subprocess forces 512 devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,80 @@
+"""Pair-scan flash attention (the jit path) vs the naive oracle, incl. the
+custom VJP and padding/cross-attention edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    naive_attention)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B=2, S=256, H=8, KV=4, hd=32, dtype=jnp.float32, Sk=None):
+    q = jax.random.normal(KEY, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Sk or S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Sk or S, KV, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None), (False, 64)])
+def test_forward_matches_naive(causal, window):
+    q, k, v = _qkv()
+    out = flash_attention(q, k, v, chunk=64, causal=causal, window=window)
+    expected = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [None, 64])
+def test_gradients_match_naive(window):
+    q, k, v = _qkv(S=128)
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(
+            fn(q, k, v) * jnp.cos(jnp.arange(q.size).reshape(q.shape)))
+
+    gf = jax.grad(loss(lambda q, k, v: flash_attention(
+        q, k, v, chunk=32, causal=True, window=window)), (0, 1, 2))(q, k, v)
+    gn = jax.grad(loss(lambda q, k, v: naive_attention(
+        q, k, v, causal=True, window=window)), (0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gn):
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+
+def test_nondivisible_lengths_padded():
+    q, k, v = _qkv(S=100)
+    out = flash_attention(q, k, v, chunk=32, causal=True)
+    expected = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-4)
+
+
+def test_cross_attention_lengths():
+    q, k, v = _qkv(S=64, Sk=192)
+    out = flash_attention(q, k, v, chunk=32, causal=False)
+    # naive with rectangular mask
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgd,bmkd->bkgqm", qg, k) / np.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1)
+    expected = jnp.einsum("bkgqm,bmkd->bqkgd", p, v).reshape(B, S, H, hd)
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-4)
+
+
+def test_unroll_equals_scan():
+    q, k, v = _qkv(S=128)
+    a = flash_attention(q, k, v, chunk=32, causal=True, unroll=False)
+    b = flash_attention(q, k, v, chunk=32, causal=True, unroll=True)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_matches_last_row():
+    q, k, v = _qkv(S=128)
+    cache_pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
+    pos = jnp.full((2,), 127, jnp.int32)
+    out = decode_attention(q[:, -1], k, v, cache_pos, pos)
+    expected = naive_attention(q, k, v, causal=True)[:, -1]
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-4)

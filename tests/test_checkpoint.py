@@ -1,0 +1,66 @@
+"""Checkpointer: atomicity, keep-K, resume extras, elastic-style restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer, restore_pytree, save_pytree
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+            "scalar": jnp.asarray(3)}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    d = str(tmp_path / "ckpt")
+    save_pytree(tree, d, extras={"step": 7})
+    restored, extras = restore_pytree(jax.eval_shape(lambda: tree), d)
+    assert extras == {"step": 7}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not os.path.exists(d + ".tmp")  # atomic rename cleaned up
+
+
+def test_keep_k_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), every=1, keep=2, async_save=False)
+    for step in (1, 2, 3, 4):
+        ck.save(step, _tree(step))
+    assert ck.latest_step() == 4
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 2  # keep-K retention
+    out = ck.restore_latest(jax.eval_shape(lambda: _tree()))
+    assert out["step"] == 4
+
+
+def test_async_save_then_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path), every=1, keep=3, async_save=True)
+    tree = _tree(5)
+    ck.save(10, tree, extras={"pipeline": {"seed": 1, "step": 42}})
+    ck.wait()
+    out = ck.restore_latest(jax.eval_shape(lambda: tree))
+    assert out["extras"]["pipeline"]["step"] == 42
+    np.testing.assert_array_equal(np.asarray(out["tree"]["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_pytree(_tree(), d)
+    bad = jax.eval_shape(lambda: {"a": jnp.zeros((9, 4)),
+                                  "nested": {"b": jnp.zeros((2, 3))},
+                                  "scalar": jnp.asarray(0)})
+    try:
+        restore_pytree(bad, d)
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass
+
+
+def test_missing_returns_none(tmp_path):
+    ck = Checkpointer(str(tmp_path / "nope"), every=1)
+    assert ck.restore_latest(jax.eval_shape(lambda: _tree())) is None

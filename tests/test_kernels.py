@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles
+(interpret mode executes the Pallas bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 128, 4, 2, 32), (2, 256, 8, 8, 64),
+                                   (1, 192, 6, 2, 16)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_sweep(dtype, shape, causal, window):
+    B, S, H, KV, hd = shape
+    q = jax.random.normal(KEY, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd), dtype)
+    bq = bk = 64
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=bq, bk=bk)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 256, 8, 2, 64), (1, 128, 4, 4, 32)])
+@pytest.mark.parametrize("window", [None, 96])
+def test_decode_attention_sweep(dtype, shape, window):
+    B, W, H, KV, hd = shape
+    q = jax.random.normal(KEY, (B, H, hd), dtype)
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, W, KV, hd), dtype)
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, W, KV, hd), dtype)
+    slot = jnp.broadcast_to(jnp.arange(W)[None], (B, W)).astype(jnp.int32)
+    # one sequence mid-stream, one full
+    pos = jnp.asarray([W // 3] + [W - 1] * (B - 1), jnp.int32)
+    out = ops.decode_attention(q, kc, vc, slot, pos, window=window, bk=64)
+    expected = ref.decode_attention_ref(q, kc, vc, slot, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_rolling_slots():
+    """Rolling cache: slot absolute positions out of order."""
+    B, W, H, KV, hd = 1, 64, 4, 2, 32
+    q = jax.random.normal(KEY, (B, H, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, W, KV, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, W, KV, hd))
+    # positions 64..127 stored rolling: slot i holds pos 64+((i+7)%64)
+    slot = ((jnp.arange(W) + 7) % W + W)[None].astype(jnp.int32)
+    pos = jnp.asarray([127], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, slot, pos, window=32, bk=32)
+    expected = ref.decode_attention_ref(q, kc, vc, slot, pos, window=32)
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 64, 8), (1, 64, 128, 16)])
+@pytest.mark.parametrize("chunk,bd", [(32, 32), (64, 64)])
+def test_mamba_scan_sweep(shape, chunk, bd):
+    b, s, d, n = shape
+    u = jax.random.normal(jax.random.PRNGKey(3), (b, s, d))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4), (b, s, d))) * 0.1
+    Bm = jax.random.normal(jax.random.PRNGKey(5), (b, s, n))
+    Cm = jax.random.normal(jax.random.PRNGKey(6), (b, s, n))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(7), (d, n)) * 0.2)
+    y, h = ops.mamba_scan(u, dt, Bm, Cm, A, chunk=chunk, bd=bd)
+    yr, hr = ref.mamba_scan_ref(u, dt, Bm, Cm, A)
+    np.testing.assert_allclose(y, yr, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(h, hr, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("q,z,d", [(10, 100, 128), (5, 50, 64), (16, 37, 32)])
+def test_policy_score_sweep(q, z, d):
+    c = jax.random.normal(jax.random.PRNGKey(8), (q, d))
+    h = jax.random.normal(jax.random.PRNGKey(9), (z, d))
+    wx = jax.random.normal(jax.random.PRNGKey(10), (d, d)) * 0.05
+    wy = jax.random.normal(jax.random.PRNGKey(11), (d, d)) * 0.05
+    mask = jnp.asarray([True] * (q - 2) + [False] * 2)
+    out = ops.policy_score(c, h, wx, wy, mask, bz=32)
+    expected = ref.policy_score_ref(c, h, wx, wy, mask)
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.exp(np.asarray(out)).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_policy_score_matches_network_head():
+    """The fused kernel must agree with the policy network's head math."""
+    import math
+    d = 64
+    q, z = 6, 20
+    c = jax.random.normal(jax.random.PRNGKey(0), (q, d))
+    h = jax.random.normal(jax.random.PRNGKey(1), (z, d))
+    wx = jax.random.normal(jax.random.PRNGKey(2), (d, d)) * 0.1
+    wy = jax.random.normal(jax.random.PRNGKey(3), (d, d)) * 0.1
+    mask = jnp.ones((q,), bool)
+    u = ((h @ wy) @ (c @ wx).T) / math.sqrt(d)
+    expected = jax.nn.log_softmax(10.0 * jnp.tanh(u), axis=-1)
+    out = ops.policy_score(c, h, wx, wy, mask)
+    np.testing.assert_allclose(out, expected, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests (task spec deliverable f).
+
+Each assigned arch instantiates its REDUCED same-family config and runs one
+train step (grad + finite check), prefill, and decode on CPU, asserting
+output shapes + no NaNs. Decode consistency (prefill+step == full forward)
+is the strongest invariant: it exercises rolling caches, slot bookkeeping,
+SSM state handoff, MoE dispatch and the enc-dec path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.lm as lm_mod
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.data import make_batch, make_decode_batch
+from repro.models import decode_step, init_params, prefill, train_loss
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, rng):
+    cfg = get_reduced_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = jax.tree.map(jnp.asarray, make_batch(rng, cfg, 2, 32, kind="train"))
+    (loss, metrics), grads = jax.value_and_grad(
+        train_loss, has_aux=True)(params, batch, cfg, 1)
+    assert np.isfinite(float(loss))
+    assert float(metrics["tokens"]) == 64
+    gsum = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gsum) and gsum > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_consistency(arch, rng):
+    cfg = get_reduced_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S, extra = 2, 32, 3
+    fb = make_batch(rng, cfg, B, S + extra, kind="prefill")
+    if cfg.encoder_decoder:
+        fb["embeds"] = fb["embeds"][:, :cfg.encoder_len]
+    fb = jax.tree.map(jnp.asarray, fb)
+
+    if cfg.encoder_decoder:
+        enc = lm_mod._whisper_encode(params, cfg, fb["embeds"])
+        x, _ = lm_mod._whisper_decode_stack(params, cfg, fb["tokens"], enc)
+    else:
+        x = lm_mod._embed_in(params, cfg, fb)
+        pos = lm_mod._default_positions(cfg, fb, B, S + extra)
+        x, _, _, _ = lm_mod._run_layers(params, cfg, x, pos, 1)
+    ref = lm_mod._logits(params, cfg, x)
+
+    pb = dict(fb)
+    if "positions" in pb:
+        pb["positions"] = fb["positions"][..., :S]
+    if "tokens" in pb:
+        pb["tokens"] = fb["tokens"][:, :S]
+    if "embeds" in pb and not cfg.encoder_decoder:
+        pb["embeds"] = fb["embeds"][:, :S]
+    cache, logits = prefill(params, pb, cfg, 1, max_seq=S + extra)
+    assert logits.shape == (B, cfg.padded_vocab)
+    errs = [float(jnp.abs(logits - ref[:, S - 1]).max())]
+    for t in range(extra):
+        db = {}
+        if cfg.encoder_decoder or cfg.embed_input:
+            db["token"] = fb["tokens"][:, S + t]
+        else:
+            db["embed"] = fb["embeds"][:, S + t]
+        if cfg.mrope:
+            db["positions"] = fb["positions"][:, :, S + t]
+        cache, lg = decode_step(params, cache, db, cfg, 1)
+        errs.append(float(jnp.abs(lg - ref[:, S + t]).max()))
+    assert max(errs) < 2e-2, (arch, errs)
+
+
+def test_sliding_window_cache_is_window_sized():
+    cfg = get_reduced_config("mixtral-8x7b")  # window 16
+    from repro.models import init_cache
+    cache = init_cache(cfg, 2, 64)
+    assert cache["layers"]["k"].shape[2] == 16  # rolling window, not 64
+
+
+def test_ssm_has_o1_decode_state():
+    cfg = get_reduced_config("falcon-mamba-7b")
+    from repro.models import init_cache
+    cache = init_cache(cfg, 2, 10_000)
+    assert "k" not in cache["layers"]  # no KV cache at all
+    assert cache["layers"]["h"].shape == (2, 2, cfg.d_inner, cfg.ssm_state)

@@ -1,0 +1,114 @@
+"""nn substrate + optimizers."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import (batchnorm_apply, batchnorm_init, layernorm_apply,
+                      layernorm_init, linear_apply, linear_init, mha_apply,
+                      mha_init, nonparametric_layernorm, rmsnorm_apply,
+                      rmsnorm_init)
+from repro.optim import (AdafactorConfig, AdamConfig, adafactor_init,
+                         adafactor_update, adam_init, adam_update,
+                         clip_by_global_norm, dequantize_int8, global_norm,
+                         quantize_int8, warmup_cosine)
+
+
+def test_linear_init_bounds():
+    p = linear_init(jax.random.PRNGKey(0), 64, 32)
+    bound = 1 / np.sqrt(64)
+    assert np.abs(np.asarray(p["w"])).max() <= bound
+    assert p["w"].shape == (64, 32)
+
+
+def test_mha_masking():
+    p = mha_init(jax.random.PRNGKey(0), 16, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 16))
+    mask = jnp.ones((2, 1, 5, 5), bool).at[:, :, :, 3:].set(False)
+    out = mha_apply(p, x, mask=mask, num_heads=4)
+    # perturbing masked-out tokens must not change outputs of attended ones
+    x2 = x.at[:, 3:].add(10.0)
+    out2 = mha_apply(p, x2, mask=mask, num_heads=4)
+    np.testing.assert_allclose(out[:, :3], out2[:, :3], rtol=1e-4, atol=1e-5)
+
+
+def test_batchnorm_running_stats():
+    params, state = batchnorm_init(4)
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 7, 4)) * 3 + 1
+    y, state = batchnorm_apply(params, state, x, training=True)
+    assert float(state["count"]) == 1
+    np.testing.assert_allclose(np.asarray(y).mean(axis=(0, 1)), 0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y).std(axis=(0, 1)), 1, atol=1e-2)
+    # eval mode uses running stats, not batch stats
+    y2, _ = batchnorm_apply(params, state, x[:1], training=False)
+    assert np.isfinite(np.asarray(y2)).all()
+
+
+def test_norms_basic():
+    p = layernorm_init(8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 8)) * 5
+    np.testing.assert_allclose(np.asarray(layernorm_apply(p, x)).mean(-1), 0,
+                               atol=1e-4)
+    r = rmsnorm_init(8)
+    y = rmsnorm_apply(r, x)
+    np.testing.assert_allclose(
+        np.sqrt((np.asarray(y, np.float64) ** 2).mean(-1)), 1, atol=1e-2)
+    z = nonparametric_layernorm(x)
+    np.testing.assert_allclose(np.asarray(z).mean(-1), 0, atol=1e-4)
+
+
+def test_adam_single_step_analytic():
+    cfg = AdamConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8)
+    params = {"w": jnp.asarray([2.0])}
+    grads = {"w": jnp.asarray([0.5])}
+    opt = adam_init(params, cfg)
+    new, opt = adam_update(params, grads, opt, cfg)
+    # step 1: mhat = g, vhat = g^2 -> update = lr * g/(|g|+eps) = lr*sign(g)
+    assert float(new["w"][0]) == pytest.approx(2.0 - 0.1, rel=1e-5)
+
+
+def test_adafactor_converges_quadratic():
+    cfg = AdafactorConfig(lr=0.3)
+    target = jnp.ones((256, 256))
+    params = {"w": jnp.zeros((256, 256))}
+    opt = adafactor_init(params, cfg)
+
+    @jax.jit
+    def step(params, opt):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+        params, opt = adafactor_update(params, g, opt, cfg)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(40):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < 0.25 * losses[0]
+    # factored slots only (no full second moment for a 256x256 matrix)
+    assert set(opt["v"]["w"].keys()) == {"vr", "vc"}
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(seed=st.integers(0, 1000))
+def test_int8_quantization_error_bound(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 7
+    q, scale = quantize_int8(x)
+    back = dequantize_int8(q, scale)
+    assert float(jnp.abs(back - x).max()) <= float(scale) / 2 + 1e-6
+
+
+def test_warmup_cosine_schedule():
+    f = warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(f(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(f(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)

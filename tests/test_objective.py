@@ -1,0 +1,116 @@
+"""Objective eqs (4)-(11)/(18)-(19): hand-computed case, np/jnp agreement,
+and hypothesis invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import InstanceConfig, generate_instance, makespan, makespan_np
+from repro.core.objective import per_edge_times_np
+
+
+def _hand_instance():
+    """2 edges, 2 requests, no backlogs; everything computable by hand."""
+    return {
+        "edge_coords": np.array([[0.0, 0.0], [1.0, 0.0]], np.float32),
+        "phi": np.array([[1.0, 0.0], [2.0, 0.0]], np.float32),  # phi(x)=a*x
+        "replicas": np.array([1.0, 2.0], np.float32),
+        "workload": np.zeros((2, 3), np.float32),
+        "w": np.array([[0.0, 1.0], [1.0, 0.0]], np.float32),
+        "ct": np.float32(1.0),
+        "req_src": np.array([0, 0], np.int32),
+        "req_size": np.array([0.5, 1.0], np.float32),
+        "edge_mask": np.array([True, True]),
+        "req_mask": np.array([True, True]),
+    }
+
+
+def test_hand_computed_local():
+    inst = _hand_instance()
+    # both local at edge 0: mu_0 = (0.5 + 1.0)*1.0 / 1 = 1.5; T = 1.5
+    assert makespan_np(inst, np.array([0, 0])) == pytest.approx(1.5)
+
+
+def test_hand_computed_transfer():
+    inst = _hand_instance()
+    # r1 -> edge 1: edge0: mu=0.5; edge1: eta = 2*1.0/2 = 1.0,
+    # kappa = ct*1.0*1.0 = 1.0, T1 = max(1.0, 0) + 1.0 = 2.0
+    assert makespan_np(inst, np.array([0, 1])) == pytest.approx(2.0)
+    t = per_edge_times_np(inst, np.array([0, 1]))
+    assert t["mu"][0] == pytest.approx(0.5)
+    assert t["eta"][1] == pytest.approx(1.0)
+    assert t["kappa"][1] == pytest.approx(1.0)
+
+
+def test_transfer_overlaps_compute():
+    """eq (9): transfer and local compute overlap via max()."""
+    inst = _hand_instance()
+    inst["workload"][1, 0] = 5.0  # big local backlog at edge 1
+    # r1 -> edge1: T1 = max(kappa=1.0, mu=5.0) + eta=1.0 = 6.0
+    assert makespan_np(inst, np.array([0, 1])) == pytest.approx(6.0)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000), q=st.integers(2, 6),
+                  z=st.integers(1, 12))
+def test_np_jnp_agree(seed, q, z):
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, InstanceConfig(num_edges=q, num_requests=z))
+    assign = rng.integers(0, q, size=inst["req_size"].shape[0]).astype(np.int32)
+    c_np = makespan_np(inst, assign)
+    c_j = float(makespan(jax.tree.map(jnp.asarray, inst), jnp.asarray(assign)))
+    assert c_np == pytest.approx(c_j, rel=1e-4, abs=1e-4)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000))
+def test_monotone_in_request_set(seed):
+    """Masking off any request never increases the makespan (the B&B bound's
+    soundness condition)."""
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, InstanceConfig(num_edges=4, num_requests=8))
+    assign = rng.integers(0, 4, size=8).astype(np.int32)
+    full = makespan_np(inst, assign)
+    drop = int(rng.integers(0, 8))
+    sub = dict(inst)
+    m = inst["req_mask"].copy()
+    m[drop] = False
+    sub["req_mask"] = m
+    assert makespan_np(sub, assign) <= full + 1e-9
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000))
+def test_padding_invariance(seed):
+    """Embedding an instance into a larger padded frame must not change the
+    objective (padded edges/requests are inert)."""
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, InstanceConfig(num_edges=3, num_requests=5))
+    qp, zp = 6, 9
+
+    def pad(a, shape, fill=0):
+        out = np.full(shape, fill, a.dtype)
+        out[tuple(slice(0, s) for s in a.shape)] = a
+        return out
+
+    padded = {
+        "edge_coords": pad(inst["edge_coords"], (qp, 2)),
+        "phi": pad(inst["phi"], (qp, 2)),
+        "replicas": pad(inst["replicas"], (qp,), fill=1),
+        "workload": pad(inst["workload"], (qp, 3)),
+        "w": pad(inst["w"], (qp, qp)),
+        "ct": inst["ct"],
+        "req_src": pad(inst["req_src"], (zp,)),
+        "req_size": pad(inst["req_size"], (zp,)),
+        "edge_mask": pad(inst["edge_mask"], (qp,), fill=False),
+        "req_mask": pad(inst["req_mask"], (zp,), fill=False),
+    }
+    assign = rng.integers(0, 3, size=5).astype(np.int32)
+    a_pad = np.zeros(zp, np.int32)
+    a_pad[:5] = assign
+    assert makespan_np(inst, assign) == pytest.approx(
+        makespan_np(padded, a_pad), rel=1e-5)
+    j = float(makespan(jax.tree.map(jnp.asarray, padded), jnp.asarray(a_pad)))
+    assert j == pytest.approx(makespan_np(inst, assign), rel=1e-4, abs=1e-4)

@@ -1,0 +1,66 @@
+"""Exact and heuristic solvers: optimality on tiny instances, feasibility,
+ordering guarantees, LP export well-formedness."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import InstanceConfig, generate_instance, makespan_np
+from repro.core.heuristics import solve_greedy, solve_ils, solve_local, solve_random
+from repro.core.ilp import solve_branch_and_bound, solve_enumerate, write_lp
+
+
+def small_instance(seed, q=3, z=5, backlog=10):
+    rng = np.random.default_rng(seed)
+    return generate_instance(
+        rng, InstanceConfig(num_edges=q, num_requests=z, backlog_high=backlog))
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000))
+def test_bnb_matches_enumeration(seed):
+    inst = small_instance(seed)
+    e = makespan_np(inst, solve_enumerate(inst))
+    b = makespan_np(inst, solve_branch_and_bound(inst))
+    assert b == pytest.approx(e, rel=1e-9)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000))
+def test_heuristics_feasible_and_ordered(seed):
+    inst = small_instance(seed, q=4, z=8)
+    qs = np.nonzero(inst["edge_mask"])[0]
+    opt = makespan_np(inst, solve_enumerate(inst))
+    for solver in (solve_local, solve_greedy,
+                   lambda i: solve_random(i, 50, seed=seed)):
+        a = solver(inst)
+        assert set(a[np.nonzero(inst["req_mask"])[0]]) <= set(qs)
+        assert makespan_np(inst, a) >= opt - 1e-9  # nothing beats the optimum
+
+
+def test_ils_never_worse_than_greedy():
+    inst = small_instance(7, q=5, z=20, backlog=20)
+    g = makespan_np(inst, solve_greedy(inst))
+    i = makespan_np(inst, solve_ils(inst, budget_s=0.5, seed=0))
+    assert i <= g + 1e-9
+
+
+def test_greedy_beats_local_on_hotspot():
+    """All requests at one edge: greedy must spread them (paper Fig. 8)."""
+    rng = np.random.default_rng(0)
+    inst = generate_instance(
+        rng, InstanceConfig(num_edges=5, num_requests=30, backlog_high=1))
+    inst["req_src"][:] = 0
+    assert makespan_np(inst, solve_greedy(inst)) < \
+        makespan_np(inst, solve_local(inst))
+
+
+def test_lp_export(tmp_path):
+    inst = small_instance(3)
+    path = str(tmp_path / "model.lp")
+    write_lp(inst, path)
+    text = open(path).read()
+    assert text.startswith("Minimize")
+    assert "Binaries" in text and text.rstrip().endswith("End")
+    z = int(np.sum(inst["req_mask"]))
+    assert text.count("r_one_") == z  # one assignment constraint per request
