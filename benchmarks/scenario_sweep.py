@@ -1,0 +1,115 @@
+"""Scenario sweep: every registered workload scenario x scheduler backend.
+
+Drives :meth:`MultiEdgeSim.drive` with each named scenario from the
+workload registry against each scheduler backend and writes a JSON report
+(per-cell completion/latency/decision metrics plus a per-scenario winner).
+This is the scenario-diversity counterpart of the paper's Table II, which
+only covers the i.i.d. uniform regime.
+
+Run:  PYTHONPATH=src python benchmarks/scenario_sweep.py
+      PYTHONPATH=src python benchmarks/scenario_sweep.py \\
+          --backends greedy,local,random,corais --batches 800
+
+``corais`` trains (or loads a cached) policy via benchmarks.common first;
+the heuristic backends need no training and finish in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.serving import CentralController, MultiEdgeSim, SimConfig
+from repro.workloads import list_scenarios, scenario
+
+REPORT_SCHEMA = "corais.scenario_sweep.v1"
+
+
+def _make_controller(backend: str, num_edges: int, batches: int,
+                     z_pad: int) -> CentralController:
+    if backend in ("corais", "corais-sample"):
+        from benchmarks.common import get_trained_policy
+        params, state, cfg = get_trained_policy(num_edges, 50, batches,
+                                                verbose=False)
+        return CentralController(scheduler=backend, policy_params=params,
+                                 policy_state=state, policy_cfg=cfg.policy,
+                                 z_pad=z_pad)
+    return CentralController(scheduler=backend)
+
+
+def run_sweep(scenarios: list[str], backends: list[str], *, num_edges: int = 5,
+              until: float = 3.0, horizon: float = 400.0, seed: int = 0,
+              batches: int = 800, verbose: bool = True) -> dict:
+    cells = {}
+    winners = {}
+    for name in scenarios:
+        cells[name] = {}
+        for backend in backends:
+            cc = _make_controller(backend, num_edges, batches, z_pad=256)
+            sim = MultiEdgeSim(SimConfig(num_edges=num_edges, seed=seed), cc)
+            t0 = time.time()
+            m = sim.drive(scenario(name), until=until, run_until=horizon)
+            m["wall_s"] = time.time() - t0
+            m["per_edge_completed"] = {str(k): v for k, v
+                                       in m.get("per_edge_completed",
+                                                {}).items()}
+            cells[name][backend] = m
+            if verbose:
+                print(f"  {name:20s} {backend:12s} completed="
+                      f"{m['completed']:4d}/{m['submitted']:<4d} "
+                      f"mean={m.get('mean_response', 0):7.3f} "
+                      f"p95={m.get('p95_response', 0):7.3f} "
+                      f"dec_mean={m['decision_mean_s'] * 1e3:6.2f}ms")
+        ok = {b: r for b, r in cells[name].items()
+              if r["completed"] == r["submitted"] and r["completed"] > 0}
+        if ok:
+            winners[name] = min(ok, key=lambda b: ok[b]["mean_response"])
+            if verbose:
+                print(f"  {name:20s} -> best mean response: {winners[name]}")
+    return {
+        "schema": REPORT_SCHEMA,
+        "config": {"num_edges": num_edges, "until": until,
+                   "horizon": horizon, "seed": seed,
+                   "scenarios": scenarios, "backends": backends},
+        "results": cells,
+        "winners": winners,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", default="all",
+                    help="comma list, or 'all' for the full registry")
+    ap.add_argument("--backends", default="greedy,local,random")
+    ap.add_argument("--edges", type=int, default=5)
+    ap.add_argument("--until", type=float, default=3.0,
+                    help="arrival window (workload horizon)")
+    ap.add_argument("--horizon", type=float, default=400.0,
+                    help="simulation end time (lets late arrivals drain)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batches", type=int, default=800,
+                    help="training budget when a corais backend is requested")
+    ap.add_argument("--out", default=None,
+                    help="report path (default results/scenario_sweep.json)")
+    args = ap.parse_args()
+
+    names = (list(list_scenarios()) if args.scenarios == "all"
+             else args.scenarios.split(","))
+    backends = args.backends.split(",")
+    print(f"== scenario sweep: {len(names)} scenarios x "
+          f"{len(backends)} backends ==")
+    report = run_sweep(names, backends, num_edges=args.edges,
+                       until=args.until, horizon=args.horizon,
+                       seed=args.seed, batches=args.batches)
+
+    out = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                   "results", "scenario_sweep.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"== report written to {os.path.abspath(out)} ==")
+
+
+if __name__ == "__main__":
+    main()

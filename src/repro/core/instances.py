@@ -25,6 +25,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.workloads.base import SizeSpec, edge_weights
+
 Instance = dict
 
 
@@ -39,6 +41,14 @@ class InstanceConfig:
     ct: float = 1.0                    # C_t
     phi_low: float = 0.0               # phi coefficients ~ U(phi_low, phi_high)
     phi_high: float = 1.0
+    # Scenario conditioning (repro.workloads): data-size law for requests AND
+    # backlogs, plus Zipf source skew. Defaults reproduce the paper's §V.A
+    # i.i.d. uniform regime exactly.
+    size_dist: str = "uniform"         # uniform | fixed | pareto | lognormal
+    size_params: tuple = ()            # family parameters (see SizeSpec)
+    size_cap: float = 1.0
+    source_skew: float = 0.0           # Zipf exponent over source edges
+    hot_edge: int = 0                  # which edge holds the top rank
 
     @property
     def q_pad(self) -> int:
@@ -48,14 +58,40 @@ class InstanceConfig:
     def z_pad(self) -> int:
         return self.max_requests or self.num_requests
 
+    @property
+    def size_spec(self) -> SizeSpec:
+        return SizeSpec(self.size_dist, self.size_params, self.size_cap)
+
 
 def _phi_eval(phi_row: np.ndarray, x: np.ndarray) -> np.ndarray:
     return phi_row[0] * x + phi_row[1]
 
 
+def _sample_sources(rng: np.random.Generator, cfg: InstanceConfig, n: int,
+                    exclude: Optional[int] = None) -> np.ndarray:
+    """Source-edge indices under the scenario's Zipf popularity skew.
+    ``source_skew=0`` keeps the paper's uniform draw (and its exact rng
+    stream). ``exclude`` drops one edge (backlog Q^in senders != receiver)."""
+    q = cfg.num_edges
+    if cfg.source_skew == 0.0:
+        if exclude is None:
+            return rng.integers(0, q, size=(n,)).astype(np.int32)
+        cands = [j for j in range(q) if j != exclude]
+        return rng.choice(cands, size=n).astype(np.int32)
+    probs = edge_weights(q, cfg.source_skew, cfg.hot_edge)
+    if exclude is not None:
+        probs = probs.copy()
+        probs[exclude] = 0.0
+        probs = probs / probs.sum()
+    return rng.choice(q, size=n, p=probs).astype(np.int32)
+
+
 def generate_instance(rng: np.random.Generator, cfg: InstanceConfig) -> Instance:
-    """Sample one instance exactly per the paper's rules (§V.A)."""
+    """Sample one instance per the paper's rules (§V.A), optionally
+    conditioned on a workload scenario (non-uniform sizes / skewed sources)
+    via the cfg's ``size_dist``/``size_params``/``source_skew`` fields."""
     q, z = cfg.num_edges, cfg.num_requests
+    size_spec = cfg.size_spec
     qp, zp = cfg.q_pad, cfg.z_pad
     assert q <= qp and z <= zp
 
@@ -74,16 +110,16 @@ def generate_instance(rng: np.random.Generator, cfg: InstanceConfig) -> Instance
         n_le = rng.integers(0, cfg.backlog_high)
         n_in = rng.integers(0, cfg.backlog_high)
         if n_le:
-            sizes = rng.uniform(0.0, 1.0, size=n_le).astype(np.float32)
+            sizes = size_spec.sample(rng, n_le).astype(np.float32)
             c_le[i] = _phi_eval(phi[i], sizes).sum() / replicas[i]          # eq (1)
         if n_in:
-            sizes = rng.uniform(0.0, 1.0, size=n_in).astype(np.float32)
-            srcs = rng.choice([j for j in range(q) if j != i], size=n_in)
+            sizes = size_spec.sample(rng, n_in).astype(np.float32)
+            srcs = _sample_sources(rng, cfg, n_in, exclude=i)
             c_in[i] = _phi_eval(phi[i], sizes).sum() / replicas[i]          # eq (3)
             t_in[i] = float(np.max(cfg.ct * sizes * w[srcs, i]))            # eq (2)
 
-    req_src = rng.integers(0, q, size=(zp,)).astype(np.int32)
-    req_size = rng.uniform(0.0, 1.0, size=(zp,)).astype(np.float32)
+    req_src = _sample_sources(rng, cfg, zp)
+    req_size = size_spec.sample(rng, zp).astype(np.float32)
 
     edge_mask = np.zeros(qp, bool)
     edge_mask[:q] = True

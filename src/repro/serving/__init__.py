@@ -1,6 +1,7 @@
 from repro.serving.controller import CentralController, SchedulerChoice
 from repro.serving.simulator import MultiEdgeSim, SimConfig
 from repro.serving.edge import SimEdge
+from repro.serving.topology import nearest_alive_edge
 
 __all__ = ["CentralController", "SchedulerChoice", "MultiEdgeSim", "SimConfig",
-           "SimEdge"]
+           "SimEdge", "nearest_alive_edge"]

@@ -20,6 +20,7 @@ from repro.core.decode import greedy_decode, sampling_decode
 from repro.core.heuristics import solve_greedy, solve_local, solve_random
 from repro.core.policy import PolicyConfig, corais_apply
 from repro.core.state import QueuedRequest, snapshot_instance
+from repro.serving.topology import nearest_alive_edge
 
 SchedulerChoice = ("corais", "corais-sample", "greedy", "local", "random", "ils")
 
@@ -70,11 +71,20 @@ class CentralController:
         alive_ids = [e.edge_id for e in alive]
         id_map = {aid: i for i, aid in enumerate(alive_ids)}
         w_alive = w[np.ix_(alive_ids, alive_ids)]
-        # remap request sources onto the alive-edge index space
+        # remap request sources onto the alive-edge index space; a request
+        # from a dead edge is re-homed at the *nearest* alive edge (its data
+        # must be re-sent from there), not silently at alive index 0, which
+        # would bias every transfer-distance cost
+        alive_flags = np.zeros(w.shape[0], bool)
+        for e in edges:
+            alive_flags[e.edge_id] = e.alive
         remapped = []
         for r in pending:
             rr = dataclasses.replace(r)
-            rr.source_edge = id_map.get(r.source_edge, 0)
+            src = r.source_edge
+            if src not in id_map:
+                src = nearest_alive_edge(w, src, alive_flags)
+            rr.source_edge = id_map[src]
             remapped.append(rr)
         zp = max(self.z_pad, len(remapped))
         qp = max(self.q_pad, len(alive))

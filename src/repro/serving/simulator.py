@@ -20,6 +20,8 @@ import numpy as np
 from repro.core.state import QueuedRequest
 from repro.serving.controller import CentralController
 from repro.serving.edge import SimEdge
+from repro.serving.topology import nearest_alive_edge
+from repro.workloads.base import Workload, workload_rng
 
 
 @dataclasses.dataclass
@@ -59,6 +61,7 @@ class MultiEdgeSim:
         self._seq = 0
         self._rid = 0
         self.metrics_rows: list[dict] = []
+        self.decision_times: list[float] = []   # one entry per non-empty round
 
     # -- client API ------------------------------------------------------
 
@@ -69,6 +72,28 @@ class MultiEdgeSim:
         self._rid += 1
         self._push(req.submit_time, "arrival", req)
         return req
+
+    def drive(self, workload: Workload, until: float,
+              run_until: Optional[float] = None,
+              seed: Optional[int] = None) -> dict:
+        """Generate arrivals from a :class:`repro.workloads.Workload` (or a
+        replayed trace) over [0, until], submit them, and run the event loop
+        to ``run_until`` (default: ``until``; pass a larger horizon to let
+        late arrivals drain). Arrivals aimed at a dead edge fail over to the
+        nearest alive edge via the standard arrival path. Deterministic for a
+        fixed (workload, seed, config)."""
+        trace_edges = int(getattr(workload, "num_edges", 0))
+        if trace_edges > self.cfg.num_edges:
+            raise ValueError(
+                f"trace was recorded on {trace_edges} edges but this sim has "
+                f"only {self.cfg.num_edges}; refusing to alias edge ids")
+        rng = workload_rng(self.cfg.seed if seed is None else seed)
+        for a in workload.arrivals(rng, self.cfg.num_edges, until):
+            if not 0 <= a.edge < self.cfg.num_edges:
+                raise ValueError(f"arrival at t={a.t} targets edge {a.edge}, "
+                                 f"outside 0..{self.cfg.num_edges - 1}")
+            self.submit(int(a.edge), float(a.size), t=float(a.t))
+        return self.run(until if run_until is None else run_until)
 
     def fail_edge(self, edge_id: int, t: float):
         self._push(t, "fail", edge_id)
@@ -92,8 +117,10 @@ class MultiEdgeSim:
             pending.extend(e.state.q_r)
             e.state.q_r = []
         if pending:
-            for req, target in self.cc.schedule(self.edges, pending, self.w,
-                                                self.cfg.ct):
+            decisions = self.cc.schedule(self.edges, pending, self.w,
+                                         self.cfg.ct)
+            self.decision_times.append(self.cc.last_decision_time)
+            for req, target in decisions:
                 req.exec_edge = target
                 src, dst = self.edges[req.source_edge], self.edges[target]
                 if target == req.source_edge:
@@ -109,21 +136,15 @@ class MultiEdgeSim:
                 self._push(ft, "exec_done", (req, e.edge_id, ft))
 
     def run(self, until: float):
-        self._push(self.now + 1e-9, "round", None)
+        # arm the scheduling-round chain once: a second run()/drive() call
+        # must not stack a parallel chain and double the round frequency
+        if not any(kind == "round" for _, _, kind, _ in self._events):
+            self._push(self.now + 1e-9, "round", None)
         while self._events and self._events[0][0] <= until:
             t, _, kind, payload = heapq.heappop(self._events)
             self.now = max(self.now, t)
             if kind == "arrival":
-                e = self.edges[payload.source_edge]
-                if e.alive:
-                    e.state.q_r.append(payload)
-                else:  # client fails over to the nearest alive edge
-                    order = np.argsort(self.w[payload.source_edge])
-                    for cand in order:
-                        if self.edges[cand].alive:
-                            payload.source_edge = int(cand)
-                            self.edges[cand].state.q_r.append(payload)
-                            break
+                self._admit(payload)
             elif kind == "transfer_done":
                 req = payload
                 dst = self.edges[req.exec_edge]
@@ -162,8 +183,7 @@ class MultiEdgeSim:
                 # nearest alive edge (their data is re-sent from the source)
                 for req in orphans:
                     req.exec_edge = -1
-                    src = self.edges[req.source_edge]
-                    (src if src.alive else self._nearest_alive(req)).state.q_r.append(req)
+                    self._admit(req)
             elif kind == "recover":
                 self.edges[payload].recover(self.now)
             elif kind == "straggle":
@@ -175,28 +195,46 @@ class MultiEdgeSim:
         self.now = until
         return self.metrics()
 
-    def _nearest_alive(self, req):
-        order = np.argsort(self.w[req.source_edge])
-        for cand in order:
-            if self.edges[cand].alive:
-                req.source_edge = int(cand)
-                return self.edges[cand]
-        raise RuntimeError("no alive edges")
+    def _nearest_alive(self, src: int) -> int:
+        """Nearest alive edge id to ``src`` (``src`` itself when alive)."""
+        return nearest_alive_edge(self.w, src, [e.alive for e in self.edges])
+
+    def _admit(self, req) -> None:
+        """Enqueue a request at its source edge, failing over to the nearest
+        alive edge. During a total outage the client retries next round
+        instead of crashing the sim (the request just waits in the heap)."""
+        try:
+            cand = self._nearest_alive(req.source_edge)
+        except RuntimeError:
+            self._push(self.now + self.cfg.round_interval, "arrival", req)
+            return
+        req.source_edge = cand
+        self.edges[cand].state.q_r.append(req)
 
     def metrics(self) -> dict:
         rows = self.metrics_rows
+        dec = np.asarray(self.decision_times) if self.decision_times else None
+        decision = {
+            "scheduler_decision_s": self.cc.last_decision_time,
+            "decision_rounds": len(self.decision_times),
+            "decision_mean_s": float(dec.mean()) if dec is not None else 0.0,
+            "decision_p95_s": (float(np.percentile(dec, 95))
+                               if dec is not None else 0.0),
+            "decision_max_s": float(dec.max()) if dec is not None else 0.0,
+        }
         if not rows:
-            return {"completed": 0}
+            return {"completed": 0, "submitted": self._rid, **decision}
         resp = np.asarray([r["response"] for r in rows])
         per_edge = {e.edge_id: sum(1 for r in rows if r["edge"] == e.edge_id)
                     for e in self.edges}
         return {
             "completed": len(rows),
+            "submitted": self._rid,
             "mean_response": float(resp.mean()),
             "p50_response": float(np.percentile(resp, 50)),
             "p95_response": float(np.percentile(resp, 95)),
             "max_response": float(resp.max()),
             "transferred_frac": float(np.mean([r["transferred"] for r in rows])),
             "per_edge_completed": per_edge,
-            "scheduler_decision_s": self.cc.last_decision_time,
+            **decision,
         }

@@ -1,0 +1,22 @@
+"""Cluster-topology helpers shared by the simulator, the central controller,
+and the workload driver."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def nearest_alive_edge(w: np.ndarray, src: int,
+                       alive: Sequence[bool]) -> int:
+    """Nearest alive edge to ``src`` by transmission distance ``w[src]``
+    (``src`` itself when alive, since w[src, src] == 0). This is the single
+    failover rule used everywhere a request references a dead edge: client
+    arrivals, orphan re-dispatch, and controller source remapping.
+
+    Raises ``RuntimeError`` when the whole cluster is down.
+    """
+    for cand in np.argsort(w[src], kind="stable"):
+        if alive[cand]:
+            return int(cand)
+    raise RuntimeError("no alive edges")

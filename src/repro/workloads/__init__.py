@@ -1,0 +1,24 @@
+"""Workload & scenario subsystem: arrival processes, trace record/replay,
+and a named scenario registry driving the simulator, instance sampling for
+training, and the benchmark sweep."""
+from repro.workloads.base import (Arrival, Merged, SizeSpec, Workload,
+                                  edge_weights, merge, workload_rng)
+from repro.workloads.processes import (DiurnalArrivals, FlashCrowdArrivals,
+                                       InhomogeneousPoisson, MMPPArrivals,
+                                       PoissonArrivals)
+from repro.workloads.trace import (SCHEMA, TraceWorkload, read_trace,
+                                   record_trace, write_trace)
+from repro.workloads.scenarios import (ScenarioSpec,
+                                       instance_config_for_scenario,
+                                       list_scenarios, register_scenario,
+                                       scenario, scenario_spec)
+
+__all__ = [
+    "Arrival", "Merged", "SizeSpec", "Workload", "edge_weights", "merge",
+    "workload_rng",
+    "PoissonArrivals", "InhomogeneousPoisson", "DiurnalArrivals",
+    "FlashCrowdArrivals", "MMPPArrivals",
+    "SCHEMA", "TraceWorkload", "read_trace", "record_trace", "write_trace",
+    "ScenarioSpec", "register_scenario", "scenario", "scenario_spec",
+    "list_scenarios", "instance_config_for_scenario",
+]

@@ -1,0 +1,141 @@
+"""Named scenario registry — one vocabulary for sim, training, benchmarks.
+
+A *scenario* bundles a workload factory (how requests arrive over time)
+with static-instance overrides (how ``core/instances.py`` should condition
+its request/backlog sampling so training and Table-III-style generalization
+see the same laws). Consumers:
+
+    wl  = scenario("flash_crowd_10x")                   # -> Workload
+    sim.drive(wl, until=3.0)                            # serving
+    cfg = instance_config_for_scenario("heavy_tail_pareto", base_cfg)
+    inst = generate_instance(rng, cfg)                  # training / eval
+    PYTHONPATH=src python benchmarks/scenario_sweep.py  # full matrix
+
+Factories accept keyword overrides forwarded to the underlying process
+dataclass, e.g. ``scenario("mmpp_bursty", rates=(2.0, 200.0))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.workloads.base import SizeSpec, Workload
+from repro.workloads.processes import (DiurnalArrivals, FlashCrowdArrivals,
+                                       MMPPArrivals, PoissonArrivals)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    name: str
+    factory: Callable[..., Workload]
+    description: str = ""
+    # InstanceConfig field overrides (size_dist/size_params/source_skew/...)
+    # applied by instance_config_for_scenario for static-instance consumers.
+    instance_overrides: Optional[dict] = None
+
+
+_REGISTRY: dict[str, ScenarioSpec] = {}
+
+
+def register_scenario(name: str, factory: Callable[..., Workload], *,
+                      description: str = "",
+                      instance_overrides: Optional[dict] = None,
+                      overwrite: bool = False) -> ScenarioSpec:
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"scenario {name!r} already registered")
+    spec = ScenarioSpec(name=name, factory=factory, description=description,
+                        instance_overrides=instance_overrides)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def scenario(name: str, **overrides) -> Workload:
+    """Instantiate a registered scenario's workload, with optional keyword
+    overrides forwarded to its factory."""
+    try:
+        spec = _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown scenario {name!r}; known: {known}") from None
+    return spec.factory(**overrides)
+
+
+def scenario_spec(name: str) -> ScenarioSpec:
+    return _REGISTRY[name]
+
+
+def list_scenarios() -> dict[str, str]:
+    """name -> one-line description, in registration order."""
+    return {name: spec.description for name, spec in _REGISTRY.items()}
+
+
+def instance_config_for_scenario(name: str, base):
+    """Condition an :class:`repro.core.InstanceConfig` on a scenario: returns
+    ``base`` with the scenario's size-distribution / source-skew overrides
+    applied (unchanged if the scenario has none, e.g. purely temporal ones)."""
+    spec = _REGISTRY[name]
+    if not spec.instance_overrides:
+        return base
+    return dataclasses.replace(base, **spec.instance_overrides)
+
+
+# -- built-in scenarios ------------------------------------------------------
+
+register_scenario(
+    "uniform_iid",
+    lambda **kw: PoissonArrivals(**{"rate": 20.0, **kw}),
+    description="Paper §V.A analogue: steady Poisson arrivals, U(0,1) sizes, "
+                "uniform edge popularity.",
+)
+
+register_scenario(
+    "hotspot_skew",
+    lambda **kw: PoissonArrivals(**{"rate": 20.0, "edge_skew": 2.0, **kw}),
+    description="Zipf(2) edge popularity: most traffic lands on one hot "
+                "edge, stressing transfer-aware balancing.",
+    instance_overrides={"source_skew": 2.0},
+)
+
+register_scenario(
+    "heavy_tail_pareto",
+    lambda **kw: PoissonArrivals(
+        **{"rate": 20.0, "sizes": SizeSpec("pareto", (1.5, 0.05)), **kw}),
+    description="Pareto(1.5) data sizes: elephant requests dominate the "
+                "makespan.",
+    instance_overrides={"size_dist": "pareto", "size_params": (1.5, 0.05)},
+)
+
+register_scenario(
+    "lognormal_sizes",
+    lambda **kw: PoissonArrivals(
+        **{"rate": 20.0, "sizes": SizeSpec("lognormal", (-1.5, 0.8)), **kw}),
+    description="Lognormal data sizes (multiplicative noise), the common "
+                "fit for measured request footprints.",
+    instance_overrides={"size_dist": "lognormal", "size_params": (-1.5, 0.8)},
+)
+
+register_scenario(
+    "diurnal",
+    lambda **kw: DiurnalArrivals(**{"base_rate": 20.0, "amplitude": 0.8,
+                                    "period": 4.0, **kw}),
+    description="Sinusoidal day/night cycle: load swings 10x between trough "
+                "and peak.",
+)
+
+register_scenario(
+    "flash_crowd_10x",
+    lambda **kw: FlashCrowdArrivals(**{"base_rate": 10.0, "multiplier": 10.0,
+                                       "spike_start": 1.0,
+                                       "spike_duration": 0.5, **kw}),
+    description="Steady base traffic plus a 10x flash crowd concentrated on "
+                "one edge for a short window.",
+    instance_overrides={"source_skew": 4.0},
+)
+
+register_scenario(
+    "mmpp_bursty",
+    lambda **kw: MMPPArrivals(**{"rates": (5.0, 80.0),
+                                 "mean_sojourn": (2.0, 0.25), **kw}),
+    description="2-state Markov-modulated Poisson: calm/burst regime "
+                "switching (classic bursty edge traffic).",
+)

@@ -11,6 +11,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pre-0.5 jax keeps it in jax.experimental
+    from jax.experimental.shard_map import shard_map
+
 from repro.configs import get_reduced_config
 from repro.configs.base import ShapeConfig
 from repro.data.synthetic import SyntheticTokens
@@ -27,8 +32,8 @@ def check_compressed_psum():
     def body(xs):
         return compressed_psum(xs, "data", 8)
 
-    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
-                                out_specs=P("data", None)))(x)
+    out = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data", None),
+                            out_specs=P("data", None)))(x)
     expected = jnp.broadcast_to(jnp.sum(x, axis=0, keepdims=True), x.shape)
     err = float(jnp.abs(out - expected).max())
     # int8 absmax quantization: per-element error <= shards * scale/2

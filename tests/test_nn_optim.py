@@ -1,10 +1,11 @@
 """nn substrate + optimizers."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.nn import (batchnorm_apply, batchnorm_init, layernorm_apply,
                       layernorm_init, linear_apply, linear_init, mha_apply,

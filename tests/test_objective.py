@@ -1,11 +1,12 @@
 """Objective eqs (4)-(11)/(18)-(19): hand-computed case, np/jnp agreement,
 and hypothesis invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import InstanceConfig, generate_instance, makespan, makespan_np
 from repro.core.objective import per_edge_times_np

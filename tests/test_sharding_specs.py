@@ -13,9 +13,17 @@ from repro.data.synthetic import input_specs
 from repro.launch.steps import TrainKnobs, param_and_opt_shapes
 from repro.sharding import specs as S
 
+def _abstract_mesh(*axes):
+    try:  # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+        return AbstractMesh(tuple(s for _, s in axes),
+                            tuple(n for n, _ in axes))
+    except TypeError:  # jax 0.4.x: AbstractMesh(shape_tuple)
+        return AbstractMesh(tuple(axes))
+
+
 MESHES = {
-    "single": AbstractMesh((16, 16), ("data", "model")),
-    "multi": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "single": _abstract_mesh(("data", 16), ("model", 16)),
+    "multi": _abstract_mesh(("pod", 2), ("data", 16), ("model", 16)),
 }
 
 

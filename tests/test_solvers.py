@@ -1,9 +1,10 @@
 """Exact and heuristic solvers: optimality on tiny instances, feasibility,
 ordering guarantees, LP export well-formedness."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import numpy as np
-import pytest
 
 from repro.core import InstanceConfig, generate_instance, makespan_np
 from repro.core.heuristics import solve_greedy, solve_ils, solve_local, solve_random

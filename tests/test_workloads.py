@@ -1,0 +1,304 @@
+"""Workload & scenario subsystem: determinism, empirical arrival rates,
+trace record->replay round trips, scenario-conditioned instance sampling,
+and scenario-driven end-to-end sim smoke tests."""
+import numpy as np
+import pytest
+
+from repro.core import InstanceConfig, generate_instance
+from repro.serving import (CentralController, MultiEdgeSim, SimConfig,
+                           nearest_alive_edge)
+from repro.workloads import (DiurnalArrivals, FlashCrowdArrivals,
+                             MMPPArrivals, PoissonArrivals, SizeSpec,
+                             instance_config_for_scenario, list_scenarios,
+                             merge, read_trace, record_trace, scenario,
+                             scenario_spec, write_trace)
+
+TIMING_KEYS = ("scheduler_decision_s", "decision_mean_s", "decision_p95_s",
+               "decision_max_s")
+
+
+def _completion(m):
+    return {k: v for k, v in m.items() if k not in TIMING_KEYS}
+
+
+# -- determinism -------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(list_scenarios()))
+def test_scenario_arrivals_deterministic(name):
+    wl = scenario(name)
+    a1 = list(wl.arrivals(np.random.default_rng(7), 4, 2.0))
+    a2 = list(wl.arrivals(np.random.default_rng(7), 4, 2.0))
+    assert a1 == a2
+    assert len(a1) > 0
+    ts = [a.t for a in a1]
+    assert ts == sorted(ts)
+    assert all(0 <= a.edge < 4 and 0 < a.size and a.t <= 2.0 for a in a1)
+
+
+# -- empirical rate sanity ---------------------------------------------------
+
+def _count(wl, until=50.0, edges=4, seed=0):
+    return len(list(wl.arrivals(np.random.default_rng(seed), edges, until)))
+
+
+def test_poisson_rate():
+    n = _count(PoissonArrivals(rate=20.0), until=50.0)
+    assert n == pytest.approx(1000, rel=0.15)
+
+
+def test_diurnal_mean_rate_and_modulation():
+    wl = DiurnalArrivals(base_rate=20.0, amplitude=0.9, period=4.0)
+    arrivals = list(wl.arrivals(np.random.default_rng(1), 4, 48.0))
+    # time-average rate is base_rate (sinusoid integrates to zero)
+    assert len(arrivals) == pytest.approx(20.0 * 48.0, rel=0.15)
+    # peaks (rate ~38) must be busier than troughs (rate ~2)
+    phase = [(a.t % 4.0) for a in arrivals]
+    rising = sum(1 for p in phase if 0.5 <= p < 1.5)     # around sin max
+    falling = sum(1 for p in phase if 2.5 <= p < 3.5)    # around sin min
+    assert rising > 3 * falling
+
+
+def test_flash_crowd_spike_volume_and_placement():
+    wl = FlashCrowdArrivals(base_rate=10.0, multiplier=10.0, spike_start=1.0,
+                            spike_duration=0.5, spike_edge=2)
+    arrivals = list(wl.arrivals(np.random.default_rng(2), 5, 3.0))
+    spike = [a for a in arrivals if 1.0 <= a.t <= 1.5]
+    rest = [a for a in arrivals if a.t < 1.0 or a.t > 1.5]
+    # spike window carries ~100 req/s vs ~10 elsewhere
+    assert len(spike) == pytest.approx(100 * 0.5, rel=0.35)
+    assert len(rest) == pytest.approx(10 * 2.5, rel=0.5)
+    # the spike concentrates on the configured edge
+    on_hot = sum(1 for a in spike if a.edge == 2)
+    assert on_hot / len(spike) > 0.8
+
+
+def test_mmpp_rate_between_regimes():
+    wl = MMPPArrivals(rates=(5.0, 80.0), mean_sojourn=(2.0, 0.25))
+    n = _count(wl, until=100.0, seed=3)
+    lo, hi = 5.0 * 100, 80.0 * 100
+    assert lo < n < hi
+    # long-run mean rate = sum(rate_i * sojourn_i) / sum(sojourn_i)
+    mean_rate = (5.0 * 2.0 + 80.0 * 0.25) / 2.25
+    assert n == pytest.approx(mean_rate * 100, rel=0.3)
+
+
+def test_merge_superposes():
+    a = PoissonArrivals(rate=5.0)
+    b = PoissonArrivals(rate=15.0)
+    n = _count(merge(a, b), until=50.0, seed=4)
+    assert n == pytest.approx(20.0 * 50, rel=0.15)
+
+
+def test_size_specs():
+    rng = np.random.default_rng(0)
+    u = SizeSpec("uniform", (0.2, 0.8)).sample(rng, 1000)
+    assert u.min() >= 0.2 and u.max() <= 0.8
+    p = SizeSpec("pareto", (1.5, 0.05)).sample(rng, 5000)
+    assert p.max() <= 1.0 and p.min() > 0
+    # heavy tail: some mass far above the scale parameter
+    assert (p > 0.5).sum() > 0
+    ln = SizeSpec("lognormal", (-1.5, 0.8)).sample(rng, 1000)
+    assert ln.max() <= 1.0 and ln.min() > 0
+    with pytest.raises(ValueError):
+        SizeSpec("nope").sample(rng, 1)
+
+
+def test_hotspot_skew_concentrates_sources():
+    wl = scenario("hotspot_skew")
+    arrivals = list(wl.arrivals(np.random.default_rng(5), 5, 10.0))
+    share0 = sum(1 for a in arrivals if a.edge == 0) / len(arrivals)
+    assert share0 > 0.5  # Zipf(2) over 5 edges puts ~68% on the hot edge
+
+
+# -- trace record / replay ---------------------------------------------------
+
+def test_trace_round_trip_exact(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    wl = scenario("heavy_tail_pareto")
+    rng = np.random.default_rng(11)
+    events = list(wl.arrivals(rng, 6, 4.0))
+    write_trace(path, events, num_edges=6, meta={"note": "unit"})
+    tr = read_trace(path)
+    assert tr.num_edges == 6 and tr.meta["note"] == "unit"
+    assert list(tr.events) == events  # bit-exact floats via json repr
+    # replay respects the until bound
+    clipped = list(tr.arrivals(None, 6, 2.0))
+    assert clipped == [a for a in events if a.t <= 2.0]
+
+
+def test_record_trace_deterministic(tmp_path):
+    p1, p2 = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    wl = scenario("mmpp_bursty")
+    n1 = record_trace(p1, wl, num_edges=3, until=5.0, seed=9)
+    n2 = record_trace(p2, wl, num_edges=3, until=5.0, seed=9)
+    assert n1 == n2
+    assert list(read_trace(p1).events) == list(read_trace(p2).events)
+
+
+def test_read_trace_rejects_bad_schema(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"schema": "corais.trace.v999"}\n')
+    with pytest.raises(ValueError, match="unsupported trace schema"):
+        read_trace(path)
+
+
+def test_read_trace_rejects_out_of_range_edge(tmp_path):
+    path = str(tmp_path / "corrupt.jsonl")
+    with open(path, "w") as f:
+        f.write('{"schema": "corais.trace.v1", "num_edges": 3}\n')
+        f.write('{"t": 0.1, "edge": 7, "size": 0.5}\n')
+    with pytest.raises(ValueError, match="edge 7 outside"):
+        read_trace(path)
+
+
+def test_drive_rejects_wider_trace(tmp_path):
+    path = str(tmp_path / "wide.jsonl")
+    record_trace(path, scenario("uniform_iid"), num_edges=8, until=1.0, seed=0)
+    sim = MultiEdgeSim(SimConfig(num_edges=4, seed=0),
+                       CentralController(scheduler="greedy"))
+    with pytest.raises(ValueError, match="recorded on 8 edges"):
+        sim.drive(read_trace(path), until=1.0)
+    # a narrower trace replays fine on a wider cluster
+    sim2 = MultiEdgeSim(SimConfig(num_edges=4, seed=0),
+                        CentralController(scheduler="greedy"))
+    path2 = str(tmp_path / "narrow.jsonl")
+    record_trace(path2, scenario("uniform_iid"), num_edges=2, until=1.0, seed=0)
+    m = sim2.drive(read_trace(path2), until=1.0, run_until=200.0)
+    assert m["completed"] == m["submitted"] > 0
+
+
+def test_replay_reproduces_live_completion_metrics(tmp_path):
+    path = str(tmp_path / "replay.jsonl")
+    wl = scenario("flash_crowd_10x")
+    live = MultiEdgeSim(SimConfig(num_edges=4, seed=0),
+                        CentralController(scheduler="greedy"))
+    m_live = live.drive(wl, until=2.0, run_until=300.0)
+    record_trace(path, wl, num_edges=4, until=2.0, seed=0)
+    replayed = MultiEdgeSim(SimConfig(num_edges=4, seed=0),
+                            CentralController(scheduler="greedy"))
+    m_replay = replayed.drive(read_trace(path), until=2.0, run_until=300.0)
+    assert m_live["completed"] == m_live["submitted"] > 0
+    assert _completion(m_live) == _completion(m_replay)
+
+
+# -- scenario-driven simulation ----------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(list_scenarios()))
+def test_scenario_drives_sim_end_to_end(name):
+    sim = MultiEdgeSim(SimConfig(num_edges=4, seed=1),
+                       CentralController(scheduler="greedy"))
+    m = sim.drive(scenario(name), until=1.5, run_until=300.0)
+    assert m["submitted"] > 0
+    assert m["completed"] == m["submitted"]  # nothing lost under any scenario
+    assert m["decision_rounds"] >= 1
+    assert m["decision_mean_s"] <= m["decision_max_s"]
+    assert m["decision_p95_s"] <= m["decision_max_s"] + 1e-12
+
+
+def test_total_outage_buffers_arrivals_until_recovery():
+    """All edges down: arrivals wait (client retry), nothing crashes, and
+    everything completes once the cluster recovers."""
+    sim = MultiEdgeSim(SimConfig(num_edges=3, seed=0),
+                       CentralController(scheduler="greedy"))
+    for i in range(3):
+        sim.fail_edge(i, t=0.5)
+    sim.recover_edge(0, t=2.0)
+    m = sim.drive(PoissonArrivals(rate=20.0), until=1.5, run_until=300.0)
+    assert m["completed"] == m["submitted"] > 0
+
+
+def test_consecutive_drives_do_not_stack_round_chains():
+    sim = MultiEdgeSim(SimConfig(num_edges=3, seed=0),
+                       CentralController(scheduler="greedy"))
+    sim.drive(PoissonArrivals(rate=15.0), until=1.0, run_until=1.0)
+    sim.drive(PoissonArrivals(rate=15.0), until=2.0, run_until=2.0)
+    rounds_in_heap = sum(1 for _, _, kind, _ in sim._events
+                         if kind == "round")
+    assert rounds_in_heap == 1  # one chain, not one per run() call
+
+
+def test_mmpp_three_state_randomized_transitions():
+    wl = MMPPArrivals(rates=(5.0, 80.0, 20.0), mean_sojourn=(1.0, 0.25, 0.5))
+    a1 = list(wl.arrivals(np.random.default_rng(6), 3, 20.0))
+    a2 = list(wl.arrivals(np.random.default_rng(6), 3, 20.0))
+    assert a1 == a2 and len(a1) > 0  # deterministic despite random jumps
+
+
+def test_drive_fails_over_dead_edge_arrivals():
+    sim = MultiEdgeSim(SimConfig(num_edges=4, seed=2),
+                       CentralController(scheduler="greedy"))
+    sim.fail_edge(1, t=0.0)
+    m = sim.drive(PoissonArrivals(rate=30.0, edge_skew=64.0, hot_edge=1),
+                  until=1.0, run_until=300.0)
+    assert m["completed"] == m["submitted"] > 0
+
+
+# -- scenario-conditioned instance sampling ----------------------------------
+
+def test_instance_config_scenario_overrides():
+    base = InstanceConfig(num_edges=5, num_requests=40)
+    cfg = instance_config_for_scenario("heavy_tail_pareto", base)
+    assert cfg.size_dist == "pareto"
+    # purely temporal scenarios leave the static config untouched
+    assert instance_config_for_scenario("diurnal", base) == base
+    assert scenario_spec("hotspot_skew").instance_overrides["source_skew"] == 2.0
+
+
+def test_generate_instance_pareto_sizes_and_skewed_sources():
+    rng = np.random.default_rng(0)
+    cfg = InstanceConfig(num_edges=5, num_requests=400,
+                         size_dist="pareto", size_params=(1.5, 0.05),
+                         source_skew=2.0)
+    inst = generate_instance(rng, cfg)
+    sizes = inst["req_size"][inst["req_mask"]]
+    assert sizes.max() <= 1.0 and sizes.min() > 0
+    assert np.median(sizes) < 0.2  # heavy tail: median far below cap
+    srcs = inst["req_src"][inst["req_mask"]]
+    share0 = np.mean(srcs == 0)
+    assert share0 > 0.4  # Zipf(2) hot edge
+    # determinism under fixed seed
+    inst2 = generate_instance(np.random.default_rng(0), cfg)
+    for k in inst:
+        np.testing.assert_array_equal(inst[k], inst2[k])
+
+
+def test_generate_instance_default_unchanged_fields():
+    """Default config must still produce the paper's U(0,1) i.i.d. regime."""
+    inst = generate_instance(np.random.default_rng(3), InstanceConfig())
+    sizes = inst["req_size"][inst["req_mask"]]
+    assert 0.0 < sizes.min() and sizes.max() <= 1.0
+    assert abs(sizes.mean() - 0.5) < 0.1
+    counts = np.bincount(inst["req_src"][inst["req_mask"]], minlength=5)
+    assert counts.max() < 3 * max(counts.min(), 1)
+
+
+# -- failover helper + controller remap fix ----------------------------------
+
+def test_nearest_alive_edge_helper():
+    w = np.array([[0.0, 1.0, 2.0],
+                  [1.0, 0.0, 0.5],
+                  [2.0, 0.5, 0.0]])
+    assert nearest_alive_edge(w, 1, [True, True, True]) == 1
+    assert nearest_alive_edge(w, 1, [True, False, True]) == 2
+    assert nearest_alive_edge(w, 1, [True, False, False]) == 0
+    with pytest.raises(RuntimeError):
+        nearest_alive_edge(w, 0, [False, False, False])
+
+
+def test_controller_remaps_dead_source_to_nearest_alive():
+    """A request whose source edge died must be re-homed at the *nearest*
+    alive edge (not alive index 0): under the 'local' policy the assignment
+    equals the remapped source, which makes the remap observable."""
+    sim = MultiEdgeSim(SimConfig(num_edges=3, seed=0),
+                       CentralController(scheduler="local"))
+    # line topology: edge1 sits next to edge2, far from edge0
+    sim.w = np.array([[0.0, 10.0, 11.0],
+                      [10.0, 0.0, 1.0],
+                      [11.0, 1.0, 0.0]], np.float32)
+    sim.edges[1].alive = False
+    from repro.core.state import QueuedRequest
+    req = QueuedRequest(rid=0, data_size=0.5, source_edge=1)
+    (scheduled,) = sim.cc.schedule(sim.edges, [req], sim.w, ct=1.0)
+    assert scheduled[0] is req
+    assert scheduled[1] == 2  # nearest alive, not the old alive-index-0 bias
