@@ -9,9 +9,15 @@ only covers the i.i.d. uniform regime.
 Run:  PYTHONPATH=src python benchmarks/scenario_sweep.py
       PYTHONPATH=src python benchmarks/scenario_sweep.py \\
           --backends greedy,local,random,corais --batches 800
+      PYTHONPATH=src python benchmarks/scenario_sweep.py \\
+          --backends greedy,batched-greedy,batched-local
 
 ``corais`` trains (or loads a cached) policy via benchmarks.common first;
-the heuristic backends need no training and finish in seconds.
+the heuristic backends need no training and finish in seconds. A
+``batched-*`` backend runs the same scenario through the array-native
+engine (repro.serving.engine, online phi fitting on) instead of the
+event-driven simulator — same cluster seed and arrival stream, so its cells
+are directly comparable to the event-driven columns.
 """
 from __future__ import annotations
 
@@ -20,8 +26,12 @@ import json
 import os
 import time
 
-from repro.serving import CentralController, MultiEdgeSim, SimConfig
-from repro.workloads import list_scenarios, scenario
+import jax
+
+from repro.serving import (ASSIGN_FNS, CentralController, EngineConfig,
+                           MultiEdgeSim, SimConfig, init_batch,
+                           make_policy_assign, make_rollout, summarize)
+from repro.workloads import list_scenarios, materialize_round_batch, scenario
 
 REPORT_SCHEMA = "corais.scenario_sweep.v1"
 
@@ -38,19 +48,75 @@ def _make_controller(backend: str, num_edges: int, batches: int,
     return CentralController(scheduler=backend)
 
 
+def _engine_assign_fn(inner: str, num_edges: int, batches: int):
+    if inner in ("corais", "corais-sample"):
+        from benchmarks.common import get_trained_policy
+        params, state, cfg = get_trained_policy(num_edges, 50, batches,
+                                                verbose=False)
+        mode = "sample" if inner == "corais-sample" else "greedy"
+        return make_policy_assign(params, state, cfg.policy, mode=mode)
+    if inner not in ASSIGN_FNS:
+        known = sorted(ASSIGN_FNS) + ["corais", "corais-sample"]
+        raise ValueError(f"no batched-engine backend {inner!r}; "
+                         f"supported: {', '.join('batched-' + k for k in known)}")
+    return ASSIGN_FNS[inner]
+
+
+def _run_batched(backend: str, name: str, *, num_edges: int, until: float,
+                 seed: int, batches: int) -> dict:
+    """One batched-engine cell (batch of 1 rollout, paired with the
+    event-driven cells by seed and arrival stream)."""
+    inner = backend.split("-", 1)[1]
+    interval = SimConfig().round_interval
+    rounds = max(1, int(round(until / interval)))
+    arrivals = materialize_round_batch(scenario(name), num_edges, rounds,
+                                       interval, 1, base_seed=seed)
+    cfg = EngineConfig(num_edges=num_edges, num_rounds=rounds,
+                       round_interval=interval, learn_phi=True,
+                       max_per_round=arrivals["mask"].shape[-1])
+    state0 = init_batch(cfg, [seed])
+    run = make_rollout(cfg, _engine_assign_fn(inner, num_edges, batches),
+                       batch=True)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 1)
+    jax.block_until_ready(run(state0, arrivals, keys))  # compile
+    t0 = time.time()
+    final, _ = run(state0, arrivals, keys)
+    jax.block_until_ready(final)
+    m = summarize(final)
+    m["wall_s"] = time.time() - t0
+    m["decision_rounds"] = rounds
+    m["decision_mean_s"] = m["wall_s"] / rounds   # whole-round proxy: the
+    m["decision_p95_s"] = m["decision_mean_s"]    # jitted rollout does not
+    m["decision_max_s"] = m["decision_mean_s"]    # isolate decode time
+    m["scheduler_decision_s"] = m["decision_mean_s"]
+    m["engine"] = "batched"
+    return m
+
+
 def run_sweep(scenarios: list[str], backends: list[str], *, num_edges: int = 5,
               until: float = 3.0, horizon: float = 400.0, seed: int = 0,
               batches: int = 800, verbose: bool = True) -> dict:
+    for backend in backends:  # fail fast, before any cell is computed
+        if backend.startswith("batched-"):
+            inner = backend.split("-", 1)[1]
+            if inner not in ASSIGN_FNS and inner not in ("corais",
+                                                         "corais-sample"):
+                _engine_assign_fn(inner, num_edges, batches)  # raises
     cells = {}
     winners = {}
     for name in scenarios:
         cells[name] = {}
         for backend in backends:
-            cc = _make_controller(backend, num_edges, batches, z_pad=256)
-            sim = MultiEdgeSim(SimConfig(num_edges=num_edges, seed=seed), cc)
-            t0 = time.time()
-            m = sim.drive(scenario(name), until=until, run_until=horizon)
-            m["wall_s"] = time.time() - t0
+            if backend.startswith("batched-"):
+                m = _run_batched(backend, name, num_edges=num_edges,
+                                 until=until, seed=seed, batches=batches)
+            else:
+                cc = _make_controller(backend, num_edges, batches, z_pad=256)
+                sim = MultiEdgeSim(SimConfig(num_edges=num_edges, seed=seed),
+                                   cc)
+                t0 = time.time()
+                m = sim.drive(scenario(name), until=until, run_until=horizon)
+                m["wall_s"] = time.time() - t0
             m["per_edge_completed"] = {str(k): v for k, v
                                        in m.get("per_edge_completed",
                                                 {}).items()}

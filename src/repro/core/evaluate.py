@@ -1,4 +1,5 @@
-"""Evaluation harness: gaps vs. the reference solver (paper §V, eq 22)."""
+"""Evaluation harness: gaps vs. the reference solver (paper §V, eq 22) on
+static instances, plus temporal rollout evaluation on the batched engine."""
 from __future__ import annotations
 
 import dataclasses
@@ -14,6 +15,8 @@ from repro.core.decode import greedy_decode, sampling_decode
 from repro.core.heuristics import solve_ils, solve_local, solve_random
 from repro.core.objective import makespan_np
 from repro.core.policy import PolicyConfig, corais_apply
+from repro.serving import engine as engine_lib
+from repro.workloads import materialize_round_batch
 
 
 @dataclasses.dataclass
@@ -108,3 +111,61 @@ def standard_method_suite(
         for n in sample_ns:
             methods[f"CoRaiS({n})"] = _policy_method(params, state, policy_cfg, "sample", n, seed=n)
     return methods
+
+
+# ---------------------------------------------------------------------------
+# Temporal evaluation: backends compared on whole engine rollouts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RolloutResult:
+    """Aggregate of one backend over a batch of engine rollouts."""
+
+    name: str
+    completed: int
+    submitted: int
+    mean_response: float
+    p95_response: float
+    makespan: float
+    wall_s: float          # whole-batch device time, compile excluded
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+
+def evaluate_rollouts(
+    assign_fns: dict[str, engine_lib.AssignFn],
+    cfg: engine_lib.EngineConfig,
+    workload,
+    *,
+    batch: int = 8,
+    base_seed: int = 0,
+    seed: int = 0,
+) -> dict[str, RolloutResult]:
+    """Run every scheduling backend over the same ``batch`` scenario
+    episodes (paired clusters and arrival streams) on the batched engine;
+    the temporal counterpart of :func:`evaluate_methods`."""
+    arrivals = materialize_round_batch(
+        workload, cfg.num_edges, cfg.num_rounds, cfg.round_interval, batch,
+        base_seed=base_seed)
+    state0 = engine_lib.init_batch(cfg, range(base_seed, base_seed + batch))
+    keys = jax.random.split(jax.random.PRNGKey(seed), batch)
+    results = {}
+    for name, fn in assign_fns.items():
+        run = engine_lib.make_rollout(cfg, fn, batch=True)
+        jax.block_until_ready(run(state0, arrivals, keys))  # compile
+        t0 = time.perf_counter()
+        final, _ = run(state0, arrivals, keys)
+        jax.block_until_ready(final)
+        wall = time.perf_counter() - t0
+        m = engine_lib.summarize(final)
+        results[name] = RolloutResult(
+            name=name,
+            completed=m["completed"],
+            submitted=m["submitted"],
+            mean_response=m.get("mean_response", float("nan")),
+            p95_response=m.get("p95_response", float("nan")),
+            makespan=m.get("makespan", float("nan")),
+            wall_s=wall,
+            metrics=m,
+        )
+    return results

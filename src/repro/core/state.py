@@ -19,26 +19,64 @@ import numpy as np
 @dataclasses.dataclass
 class PhiEstimator:
     """Affine phi(x) = a*x + b fitted online from (data_size, runtime) pairs
-    by least squares — the paper's numpy.polyfit procedure (§III-C1). Only
-    *local* history is used, preserving per-edge heterogeneity."""
+    by least squares over a sliding window of the most recent observations
+    (the paper's numpy.polyfit procedure, §III-C1). Only *local* history is
+    used, preserving per-edge heterogeneity.
+
+    The fit is maintained through running sums (n, Sx, Sy, Sxx, Sxy) with
+    O(1) eviction at the window edge, so ``observe`` is O(1) per completed
+    request instead of an O(n) refit; the closed-form coefficients equal
+    ``np.polyfit(window, 1)`` (pinned by a test). Set ``frozen`` to pin the
+    coefficients (oracle mode for engine-equivalence runs).
+    """
 
     a: float = 1.0
     b: float = 0.0
     min_samples: int = 8
+    window: int = 512
+    frozen: bool = False
     _xs: list = dataclasses.field(default_factory=list)
     _ys: list = dataclasses.field(default_factory=list)
+    _sx: float = 0.0
+    _sy: float = 0.0
+    _sxx: float = 0.0
+    _sxy: float = 0.0
+    _n: int = 0
 
     def observe(self, data_size: float, runtime: float) -> None:
-        self._xs.append(float(data_size))
-        self._ys.append(float(runtime))
-        if len(self._xs) >= self.min_samples:
-            xs = np.asarray(self._xs[-512:])
-            ys = np.asarray(self._ys[-512:])
-            if np.std(xs) < 1e-9:
-                return  # constant-size history: the affine fit is degenerate
-            a, b = np.polyfit(xs, ys, 1)
-            if np.isfinite(a) and np.isfinite(b) and a > 0:
-                self.a, self.b = float(a), float(max(b, 0.0))
+        if self.frozen:
+            return
+        x, y = float(data_size), float(runtime)
+        self._xs.append(x)
+        self._ys.append(y)
+        if len(self._xs) > 2 * (self.window + 1):
+            # amortized O(1) trim: only the trailing window+1 samples are
+            # ever read again (the eviction below indexes from the end)
+            del self._xs[: len(self._xs) - (self.window + 1)]
+            del self._ys[: len(self._ys) - (self.window + 1)]
+        self._sx += x
+        self._sy += y
+        self._sxx += x * x
+        self._sxy += x * y
+        self._n += 1
+        if self._n > self.window:  # evict the sample leaving the window
+            xo = self._xs[len(self._xs) - self.window - 1]
+            yo = self._ys[len(self._ys) - self.window - 1]
+            self._sx -= xo
+            self._sy -= yo
+            self._sxx -= xo * xo
+            self._sxy -= xo * yo
+            self._n -= 1
+        n = self._n
+        if n < self.min_samples:
+            return
+        var = max(self._sxx / n - (self._sx / n) ** 2, 0.0)
+        if var < 1e-18:
+            return  # constant-size history: the affine fit is degenerate
+        a = (self._sxy - self._sx * self._sy / n) / (self._sxx - self._sx**2 / n)
+        b = (self._sy - a * self._sx) / n
+        if np.isfinite(a) and np.isfinite(b) and a > 0:
+            self.a, self.b = float(a), float(max(b, 0.0))
 
     def __call__(self, data_size) -> float:
         return self.a * np.asarray(data_size) + self.b
@@ -87,6 +125,47 @@ class EdgeServiceState:
             default=0.0,
         )
         return c_le, c_in, t_in
+
+
+def slot_workload_features(
+    phi_est,
+    replicas,
+    w,
+    ct,
+    slot_size,
+    slot_src,
+    slot_edge,
+    slot_ready,
+    slot_start,
+    t,
+):
+    """Array twin of :meth:`EdgeServiceState.workload`: evaluate (c_le, c_in,
+    t_in) per eqs (1)-(3) for every edge directly from a batched engine's
+    request slot table at time ``t``. jnp, jit/vmap-safe.
+
+    Slot-queue membership mirrors the live queues of Fig. 5: a committed slot
+    (``slot_edge >= 0``) whose data has not yet arrived (``ready > t``) is in
+    Q^in; one whose data arrived but whose execution has not started
+    (``ready <= t < start``) is in Q^le. Started/finished slots contribute
+    nothing, exactly like the oracle's queues at a scheduling round.
+
+    Shapes: phi_est (Q, 2), replicas (Q,), w (Q, Q); slot_* (Z,); returns
+    (Q, 3) float32.
+    """
+    import jax.numpy as jnp
+
+    num_edges = w.shape[-1]
+    committed = slot_edge >= 0
+    e = jnp.clip(slot_edge, 0, num_edges - 1)
+    in_transfer = committed & (slot_ready > t)
+    waiting = committed & (slot_ready <= t) & (slot_start > t)
+    comp = phi_est[e, 0] * slot_size + phi_est[e, 1]          # (Z,) phi(f_z)
+    zeros = jnp.zeros(num_edges, jnp.float32)
+    c_le = zeros.at[e].add(jnp.where(waiting, comp, 0.0)) / replicas     # eq (1)
+    c_in = zeros.at[e].add(jnp.where(in_transfer, comp, 0.0)) / replicas  # eq (3)
+    trans = ct * slot_size * w[slot_src, e]                   # eq (2) terms
+    t_in = zeros.at[e].max(jnp.where(in_transfer, trans, 0.0))
+    return jnp.stack([c_le, c_in, t_in], axis=-1).astype(jnp.float32)
 
 
 def snapshot_instance(

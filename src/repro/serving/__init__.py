@@ -1,7 +1,14 @@
 from repro.serving.controller import CentralController, SchedulerChoice
 from repro.serving.simulator import MultiEdgeSim, SimConfig
 from repro.serving.edge import SimEdge
+from repro.serving.engine import (ASSIGN_FNS, EngineConfig, greedy_assign,
+                                  init_batch, init_state, local_assign,
+                                  make_policy_assign, make_rollout,
+                                  step_round, summarize)
 from repro.serving.topology import nearest_alive_edge
 
 __all__ = ["CentralController", "SchedulerChoice", "MultiEdgeSim", "SimConfig",
-           "SimEdge", "nearest_alive_edge"]
+           "SimEdge", "nearest_alive_edge",
+           "EngineConfig", "init_state", "init_batch", "step_round",
+           "make_rollout", "summarize", "local_assign", "greedy_assign",
+           "make_policy_assign", "ASSIGN_FNS"]

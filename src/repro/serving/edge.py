@@ -15,6 +15,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.state import EdgeServiceState, PhiEstimator, QueuedRequest
+from repro.serving.rounds import service_runtime
 
 
 @dataclasses.dataclass
@@ -28,12 +29,15 @@ class SimEdge:
     noise: float = 0.02
     speed_factor: float = 1.0     # >1 = straggler (slowed edge)
     alive: bool = True
+    phi_oracle: bool = False      # pin the estimator to the true coefficients
 
     def __post_init__(self):
+        phi = (PhiEstimator(a=self.true_a, b=self.true_b, frozen=True)
+               if self.phi_oracle else PhiEstimator(a=1.0, b=0.0))
         self.state = EdgeServiceState(
             edge_id=self.edge_id,
             coords=self.coords,
-            phi=PhiEstimator(a=1.0, b=0.0),
+            phi=phi,
             replicas=self.replicas,
         )
         # replica lanes: next-free times
@@ -45,8 +49,8 @@ class SimEdge:
 
     def true_runtime(self, size: float) -> float:
         jitter = 1.0 + self.noise * float(self.rng.standard_normal())
-        return max(1e-6, (self.true_a * size + self.true_b)
-                   * max(jitter, 0.1) * self.speed_factor)
+        return float(service_runtime(self.true_a, self.true_b, size,
+                                     speed=self.speed_factor, jitter=jitter))
 
     def start_executable(self, now: float) -> list[tuple[float, QueuedRequest]]:
         """Pop requests from Q^le onto free replica lanes.

@@ -1,0 +1,402 @@
+"""Array-native batched rollout engine for multi-edge cooperative serving.
+
+The struct-of-arrays twin of :class:`repro.serving.simulator.MultiEdgeSim`:
+the whole serving system lives in one fixed-shape ``SimState`` pytree (a
+plain dict, like every instance pytree in this repo) and one pure
+``step_round`` transition, so rollouts are `jit`-able end to end and
+`vmap`-able over an instance axis — hundreds of scenario instances roll
+forward in parallel on device. The event-driven simulator remains the
+correctness oracle; a trace-driven equivalence test pins the two engines to
+each other (tests/test_engine.py).
+
+Why the engines agree: the oracle's replica-lane model is a
+work-conserving FIFO-by-ready-time multi-server queue — a request's start
+time is ``max(data_ready, earliest free lane)``, with requests claiming
+lanes in the order their data arrives. Once a request's ready time has
+passed, no later-scheduled request can be ahead of it in that order (new
+commits always become ready at or after the current round). The engine
+exploits this: each round it *finalizes* the start/finish of every slot
+whose ready time has passed via a ``lax.scan`` lane recursion in ready
+order, possibly assigning start times in the future, and leaves in-transfer
+slots open. That is exactly the schedule the event heap would produce,
+without events.
+
+State layout (Q edges, L = replicas_high lanes, Z = num_rounds *
+max_per_round request slots; all leaves fixed-shape, so a leading batch
+axis vmaps):
+
+    coords (Q,2)  w (Q,Q)  phi_true (Q,2)  phi_est (Q,2)  replicas (Q,)
+    speed (Q,)  ct ()  t ()  round () i32  completed () i32
+    lane_free (Q,L)                       INF beyond an edge's zeta lanes
+    slot_size/src/edge/submit/ready/start/finish (Z,)   edge=-1 => empty
+    phi_n/sx/sy/sxx/sxy (Q,)              running LSQ sums (learn_phi mode)
+
+Deliberate deviations from the oracle (documented, not bugs): execution is
+deterministic (the oracle's ``exec_noise`` models measurement jitter; the
+engine simulates the mean dynamics — pin the oracle with ``exec_noise=0``),
+there are no edge failures/recoveries, and online phi fitting uses running
+sums over the whole rollout rather than a sliding window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decode import greedy_decode, sampling_decode
+from repro.core.objective import makespan
+from repro.core.policy import PolicyConfig, corais_apply
+from repro.core.state import slot_workload_features
+from repro.serving import rounds
+
+#: Sentinel for "never" (empty lane slots, un-ready/un-started requests).
+INF = 1e30
+#: Horizon passed to :func:`advance` to drain every committed request.
+DRAIN_HORIZON = 1e7
+
+#: assign_fn(key, instance) -> (A,) int32 execution-edge per pending request.
+AssignFn = Callable[[jax.Array, dict], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static shape/physics parameters of a batched rollout.
+
+    Field names follow :class:`repro.serving.simulator.SimConfig` where the
+    two overlap, and :func:`init_state` draws the cluster through the same
+    ``rounds.sample_cluster``, so (cfg, seed) names the same cluster in both
+    engines."""
+
+    num_edges: int = 5
+    replicas_high: int = 4
+    ct: float = 1.0
+    round_interval: float = 0.25
+    phi_low: float = 0.2
+    phi_high: float = 1.0
+    num_rounds: int = 12           # scheduling rounds (slot table rows)
+    max_per_round: int = 16        # padded arrivals per round (slot cols)
+    learn_phi: bool = False        # online phi fitting vs oracle phi_true
+    phi_min_samples: int = 8
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_rounds * self.max_per_round
+
+    @property
+    def until(self) -> float:
+        """Arrival horizon covered by the slot table."""
+        return self.num_rounds * self.round_interval
+
+
+def init_state(cfg: EngineConfig, seed: int = 0) -> dict:
+    """Fresh SimState for one instance (numpy leaves; jit converts)."""
+    q, lanes, z = cfg.num_edges, cfg.replicas_high, cfg.num_slots
+    cluster = rounds.sample_cluster(q, cfg.replicas_high, cfg.phi_low,
+                                    cfg.phi_high, seed)
+    phi_true = np.stack([cluster.true_a, cluster.true_b], -1).astype(np.float32)
+    lane_free = np.where(
+        np.arange(lanes)[None, :] < cluster.replicas[:, None], 0.0, INF
+    ).astype(np.float32)
+    return {
+        "coords": cluster.coords.astype(np.float32),
+        "w": cluster.w.astype(np.float32),
+        "phi_true": phi_true,
+        "phi_est": (np.tile(np.float32([1.0, 0.0]), (q, 1))
+                    if cfg.learn_phi else phi_true.copy()),
+        "replicas": cluster.replicas.astype(np.float32),
+        "speed": np.ones(q, np.float32),
+        "ct": np.float32(cfg.ct),
+        "t": np.float32(0.0),
+        "round": np.int32(0),
+        "completed": np.int32(0),
+        "lane_free": lane_free,
+        "slot_size": np.zeros(z, np.float32),
+        "slot_src": np.zeros(z, np.int32),
+        "slot_edge": np.full(z, -1, np.int32),
+        "slot_submit": np.zeros(z, np.float32),
+        "slot_ready": np.full(z, INF, np.float32),
+        "slot_start": np.full(z, INF, np.float32),
+        "slot_finish": np.full(z, INF, np.float32),
+        "phi_n": np.zeros(q, np.float32),
+        "phi_sx": np.zeros(q, np.float32),
+        "phi_sy": np.zeros(q, np.float32),
+        "phi_sxx": np.zeros(q, np.float32),
+        "phi_sxy": np.zeros(q, np.float32),
+    }
+
+
+def init_batch(cfg: EngineConfig, seeds) -> dict:
+    """Stack per-seed states into one pytree with a leading batch axis."""
+    states = [init_state(cfg, int(s)) for s in seeds]
+    return {k: np.stack([s[k] for s in states]) for k in states[0]}
+
+
+# ---------------------------------------------------------------------------
+# transition pieces (pure; compose into step_round / rollout)
+# ---------------------------------------------------------------------------
+
+
+def advance(state: dict, t_new, cfg: EngineConfig) -> dict:
+    """Move time forward to ``t_new``: finalize the lane schedule of every
+    slot whose data arrives by ``t_new`` (ready order; mirrors the oracle's
+    FIFO lane recursion — see module docstring) and book completions."""
+    startable = ((state["slot_edge"] >= 0) & (state["slot_start"] > INF / 2)
+                 & (state["slot_ready"] <= t_new))
+    keys = jnp.where(startable, state["slot_ready"], INF)
+    order = jnp.argsort(keys)  # stable: ties resolve in slot (= arrival) order
+
+    def body(carry, idx):
+        lane_free, start, finish, psums = carry
+        ok = keys[idx] < INF / 2
+        e = jnp.clip(state["slot_edge"][idx], 0, cfg.num_edges - 1)
+        lanes = lane_free[e]
+        lane = jnp.argmin(lanes)
+        st = jnp.maximum(state["slot_ready"][idx], lanes[lane])
+        size = state["slot_size"][idx]
+        # jnp mirror of rounds.service_runtime (jitter == 1: deterministic)
+        rt = jnp.maximum(
+            rounds.MIN_RUNTIME,
+            (state["phi_true"][e, 0] * size + state["phi_true"][e, 1])
+            * state["speed"][e],
+        )
+        fin = st + rt
+        lane_free = lane_free.at[e, lane].set(jnp.where(ok, fin, lanes[lane]))
+        start = start.at[idx].set(jnp.where(ok, st, start[idx]))
+        finish = finish.at[idx].set(jnp.where(ok, fin, finish[idx]))
+        if cfg.learn_phi:  # observe (size, runtime) at start, like the oracle
+            n, sx, sy, sxx, sxy = psums
+            g = ok.astype(jnp.float32)
+            psums = (n.at[e].add(g), sx.at[e].add(g * size),
+                     sy.at[e].add(g * rt), sxx.at[e].add(g * size * size),
+                     sxy.at[e].add(g * size * rt))
+        return (lane_free, start, finish, psums), None
+
+    psums = (state["phi_n"], state["phi_sx"], state["phi_sy"],
+             state["phi_sxx"], state["phi_sxy"])
+    carry = (state["lane_free"], state["slot_start"], state["slot_finish"],
+             psums)
+    (lane_free, start, finish, psums), _ = jax.lax.scan(body, carry, order)
+
+    out = dict(state)
+    out["lane_free"] = lane_free
+    out["slot_start"] = start
+    out["slot_finish"] = finish
+    out["t"] = jnp.asarray(t_new, jnp.float32)
+    out["completed"] = jnp.sum(finish <= t_new).astype(jnp.int32)
+    if cfg.learn_phi:
+        n, sx, sy, sxx, sxy = psums
+        out["phi_n"], out["phi_sx"], out["phi_sy"] = n, sx, sy
+        out["phi_sxx"], out["phi_sxy"] = sxx, sxy
+        nn = jnp.maximum(n, 1.0)
+        var = sxx / nn - jnp.square(sx / nn)
+        denom = sxx - jnp.square(sx) / nn
+        a = (sxy - sx * sy / nn) / jnp.where(denom == 0, 1.0, denom)
+        b = (sy - a * sx) / nn
+        valid = ((n >= cfg.phi_min_samples) & (var > 1e-12) & (a > 0)
+                 & jnp.isfinite(a) & jnp.isfinite(b))
+        est = jnp.stack([a, jnp.maximum(b, 0.0)], -1)
+        out["phi_est"] = jnp.where(valid[:, None], est, state["phi_est"])
+    return out
+
+
+def round_instance(state: dict, arr: dict, cfg: EngineConfig) -> dict:
+    """Freeze (state, this round's arrivals) into a scheduling instance with
+    the same layout as core.instances/core.state.snapshot_instance, so the
+    policy, the heuristics, and the objective all run on it unchanged."""
+    wl = slot_workload_features(
+        state["phi_est"], state["replicas"], state["w"], state["ct"],
+        state["slot_size"], state["slot_src"], state["slot_edge"],
+        state["slot_ready"], state["slot_start"], state["t"],
+    )
+    inst = {
+        "edge_coords": state["coords"],
+        "phi": state["phi_est"],
+        "replicas": state["replicas"],
+        "workload": wl,
+        "w": state["w"],
+        "ct": state["ct"],
+        "req_src": arr["src"].astype(jnp.int32),
+        "req_size": jnp.where(arr["mask"], arr["size"], 0.0),
+        "edge_mask": jnp.ones(cfg.num_edges, bool),
+        "req_mask": arr["mask"],
+    }
+    if "rid" in arr:  # pass-through for scripted/replay assign fns
+        inst["req_rid"] = arr["rid"].astype(jnp.int32)
+    return inst
+
+
+def commit(state: dict, arr: dict, assign, cfg: EngineConfig) -> dict:
+    """Dispatch this round's arrivals (CC steps v-vi): write them into the
+    round's slot row with their execution edge and data-ready time (local:
+    now; remote: now + eq (2) transfer delay)."""
+    a_cols = cfg.max_per_round
+    if arr["size"].shape[-1] != a_cols:
+        raise ValueError(
+            f"arrival batch width {arr['size'].shape[-1]} != "
+            f"cfg.max_per_round {a_cols}; slot-table rows would misalign "
+            f"(materialize with max_per_round={a_cols}, or build the "
+            f"EngineConfig from the materialized width)")
+    assign = assign.astype(jnp.int32)
+    src = arr["src"].astype(jnp.int32)
+    mask = arr["mask"]
+    size = jnp.where(mask, arr["size"], 0.0).astype(jnp.float32)
+    delay = rounds.transfer_delay(state["ct"], size,
+                                  state["w"][src, jnp.clip(assign, 0)])
+    ready = state["t"] + jnp.where(assign == src, 0.0, delay)
+    base = state["round"] * a_cols
+
+    def put(dst, vals):
+        return jax.lax.dynamic_update_slice(dst, vals, (base,))
+
+    out = dict(state)
+    out["slot_size"] = put(state["slot_size"], size)
+    out["slot_src"] = put(state["slot_src"], src)
+    out["slot_edge"] = put(state["slot_edge"], jnp.where(mask, assign, -1))
+    out["slot_submit"] = put(state["slot_submit"],
+                             arr["t"].astype(jnp.float32))
+    out["slot_ready"] = put(state["slot_ready"],
+                            jnp.where(mask, ready, INF).astype(jnp.float32))
+    out["round"] = state["round"] + 1
+    return out
+
+
+def step_round(state: dict, arr: dict, assign_fn: AssignFn,
+               cfg: EngineConfig, key) -> tuple[dict, dict]:
+    """One scheduling round (paper Fig. 2 iii-vi): advance the cluster one
+    round interval, evaluate per-edge workload state, schedule this round's
+    arrivals, dispatch. Returns (state, per-round info)."""
+    prev_completed = state["completed"]
+    state = advance(state, state["t"] + cfg.round_interval, cfg)
+    inst = round_instance(state, arr, cfg)
+    assign = assign_fn(key, inst)
+    state = commit(state, arr, assign, cfg)
+    finish = state["slot_finish"]
+    done = finish <= state["t"]
+    info = {
+        "t": state["t"],
+        "features": inst["workload"],
+        "assign": assign.astype(jnp.int32),
+        "completed": state["completed"],
+        "round_completions": state["completed"] - prev_completed,
+        "makespan": jnp.max(jnp.where(done, finish, 0.0)),
+    }
+    return state, info
+
+
+def make_rollout(cfg: EngineConfig, assign_fn: AssignFn, *,
+                 batch: bool = False, drain_to: Optional[float] = DRAIN_HORIZON):
+    """Build a jitted ``run(state, arrivals, key) -> (state, infos)``.
+
+    ``arrivals`` is the padded per-round batch from
+    :func:`repro.workloads.batch.materialize_rounds` — dict of (R, A) arrays
+    (leading batch axis too when ``batch=True``, as produced by
+    ``materialize_round_batch``; pass a (B,)-batch of states from
+    :func:`init_batch` and a (B,) key array). ``drain_to`` runs a final
+    :func:`advance` so in-flight work completes (None: leave it in flight).
+    """
+
+    def run(state, arrivals, key):
+        num_rounds = arrivals["size"].shape[0]
+        if num_rounds > cfg.num_rounds:
+            raise ValueError(
+                f"arrivals cover {num_rounds} rounds but the slot table "
+                f"holds cfg.num_rounds={cfg.num_rounds}")
+
+        def body(carry, arr):
+            st, k = carry
+            k, sub = jax.random.split(k)
+            st, info = step_round(st, arr, assign_fn, cfg, sub)
+            return (st, k), info
+
+        (state, _), infos = jax.lax.scan(body, (state, key), arrivals)
+        if drain_to is not None:
+            state = advance(state, drain_to, cfg)
+        return state, infos
+
+    if batch:
+        run = jax.vmap(run)
+    return jax.jit(run)
+
+
+def summarize(state: dict) -> dict:
+    """Host-side metrics mirroring ``MultiEdgeSim.metrics()`` keys, computed
+    from the final slot table. Works on batched states (leading axis is
+    aggregated as one population)."""
+    s = jax.device_get(state)
+    committed = s["slot_edge"] >= 0
+    done = committed & (s["slot_finish"] <= np.expand_dims(
+        s["t"], axis=tuple(range(np.ndim(s["t"]), s["slot_finish"].ndim))))
+    submitted = int(committed.sum())
+    completed = int(done.sum())
+    out = {"completed": completed, "submitted": submitted}
+    if not completed:
+        return out
+    resp = (s["slot_finish"] - s["slot_submit"])[done]
+    edges = s["slot_edge"][done]
+    out.update({
+        "mean_response": float(resp.mean()),
+        "p50_response": float(np.percentile(resp, 50)),
+        "p95_response": float(np.percentile(resp, 95)),
+        "max_response": float(resp.max()),
+        "transferred_frac": float((edges != s["slot_src"][done]).mean()),
+        "per_edge_completed": {int(e): int(c) for e, c in
+                               zip(*np.unique(edges, return_counts=True))},
+        "makespan": float(s["slot_finish"][done].max()),
+    })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# built-in assign functions (all jit/vmap-safe)
+# ---------------------------------------------------------------------------
+
+
+def local_assign(key, inst):
+    """Every request executes at its source edge (the Local baseline)."""
+    del key
+    return inst["req_src"].astype(jnp.int32)
+
+
+def greedy_assign(key, inst):
+    """jnp twin of heuristics.solve_greedy: size-descending greedy insertion,
+    each request to the edge minimizing the incremental makespan (later
+    requests parked at their source during evaluation)."""
+    del key
+    num_edges = inst["w"].shape[-1]
+    sizes, rmask = inst["req_size"], inst["req_mask"]
+    order = jnp.argsort(jnp.where(rmask, -sizes, jnp.inf))
+    cur0 = inst["req_src"].astype(jnp.int32)
+
+    def body(cur, z):
+        costs = jax.vmap(
+            lambda q: makespan(inst, cur.at[z].set(q))
+        )(jnp.arange(num_edges, dtype=jnp.int32))
+        best = jnp.argmin(costs).astype(jnp.int32)
+        return jnp.where(rmask[z], cur.at[z].set(best), cur), None
+
+    cur, _ = jax.lax.scan(body, cur0, order)
+    return cur
+
+
+def make_policy_assign(params, policy_state, policy_cfg: PolicyConfig,
+                       mode: str = "greedy", num_samples: int = 64) -> AssignFn:
+    """The CoRaiS policy as an engine scheduler (greedy or best-of-n decode)."""
+
+    def fn(key, inst):
+        lp, _ = corais_apply(params, policy_state, inst, policy_cfg,
+                             training=False)
+        if mode == "greedy":
+            return greedy_decode(lp)
+        assign, _ = sampling_decode(key, inst, lp, num_samples)
+        return assign.astype(jnp.int32)
+
+    return fn
+
+
+ASSIGN_FNS = {
+    "local": local_assign,
+    "greedy": greedy_assign,
+}

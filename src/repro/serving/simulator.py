@@ -20,6 +20,7 @@ import numpy as np
 from repro.core.state import QueuedRequest
 from repro.serving.controller import CentralController
 from repro.serving.edge import SimEdge
+from repro.serving.rounds import sample_cluster, transfer_delay
 from repro.serving.topology import nearest_alive_edge
 from repro.workloads.base import Workload, workload_rng
 
@@ -34,25 +35,30 @@ class SimConfig:
     phi_low: float = 0.2
     phi_high: float = 1.0
     exec_noise: float = 0.02
+    # Oracle mode: every edge's estimator is pinned to its hidden true
+    # coefficients (no online fitting). Used with exec_noise=0 to pin this
+    # simulator against the batched engine, which shares the same cluster
+    # prior via rounds.sample_cluster.
+    phi_oracle: bool = False
 
 
 class MultiEdgeSim:
     def __init__(self, cfg: SimConfig, controller: CentralController):
         self.cfg = cfg
         self.cc = controller
-        rng = np.random.default_rng(cfg.seed)
-        self.rng = rng
-        coords = rng.uniform(0, 1, size=(cfg.num_edges, 2))
-        self.w = np.linalg.norm(coords[:, None] - coords[None, :], axis=-1)
+        cluster = sample_cluster(cfg.num_edges, cfg.replicas_high,
+                                 cfg.phi_low, cfg.phi_high, cfg.seed)
+        self.w = cluster.w
         self.edges = [
             SimEdge(
                 edge_id=i,
-                coords=tuple(coords[i]),
-                true_a=float(rng.uniform(cfg.phi_low, cfg.phi_high)),
-                true_b=float(rng.uniform(0.0, 0.1)),
-                replicas=int(rng.integers(1, cfg.replicas_high + 1)),
+                coords=tuple(cluster.coords[i]),
+                true_a=float(cluster.true_a[i]),
+                true_b=float(cluster.true_b[i]),
+                replicas=int(cluster.replicas[i]),
                 rng=np.random.default_rng((cfg.seed, i)),
                 noise=cfg.exec_noise,
+                phi_oracle=cfg.phi_oracle,
             )
             for i in range(cfg.num_edges)
         ]
@@ -128,7 +134,8 @@ class MultiEdgeSim:
                 else:
                     src.state.q_out.append(req)
                     dst.state.q_in.append(req)
-                    dt = self.cfg.ct * req.data_size * self.w[req.source_edge, target]
+                    dt = transfer_delay(self.cfg.ct, req.data_size,
+                                        self.w[req.source_edge, target])
                     self._push(self.now + dt, "transfer_done", req)
         # kick executions
         for e in self.edges:

@@ -3,6 +3,7 @@ and a named scenario registry driving the simulator, instance sampling for
 training, and the benchmark sweep."""
 from repro.workloads.base import (Arrival, Merged, SizeSpec, Workload,
                                   edge_weights, merge, workload_rng)
+from repro.workloads.batch import materialize_round_batch, materialize_rounds
 from repro.workloads.processes import (DiurnalArrivals, FlashCrowdArrivals,
                                        InhomogeneousPoisson, MMPPArrivals,
                                        PoissonArrivals)
@@ -15,7 +16,7 @@ from repro.workloads.scenarios import (ScenarioSpec,
 
 __all__ = [
     "Arrival", "Merged", "SizeSpec", "Workload", "edge_weights", "merge",
-    "workload_rng",
+    "workload_rng", "materialize_rounds", "materialize_round_batch",
     "PoissonArrivals", "InhomogeneousPoisson", "DiurnalArrivals",
     "FlashCrowdArrivals", "MMPPArrivals",
     "SCHEMA", "TraceWorkload", "read_trace", "record_trace", "write_trace",

@@ -1,0 +1,117 @@
+"""Materialize arrival streams into padded per-round batches for the
+array-native engine (:mod:`repro.serving.engine`).
+
+The engine schedules in fixed rounds: round ``r`` (0-indexed) fires at
+``(r+1) * round_interval`` and schedules every arrival in the window
+``(r*dt, (r+1)*dt]`` — the same windows the event-driven simulator's round
+chain induces. :func:`materialize_rounds` buckets a :class:`Workload`'s
+stream into those windows and pads each to a fixed width, yielding the
+dict of (R, A) arrays ``make_rollout`` scans over:
+
+    t    (R, A) f32   arrival times (submit timestamps)
+    src  (R, A) i32   source edge per arrival
+    size (R, A) f32   data size per arrival
+    mask (R, A) bool  True for real arrivals
+    rid  (R, A) i32   global arrival index in time order (== the rid the
+                      event simulator assigns when driven by the same
+                      (workload, seed), which is what trace-equivalence
+                      tests key on)
+
+Determinism matches ``MultiEdgeSim.drive``: the stream is drawn from
+``workload_rng(seed)``, so materializing and driving the same (workload,
+seed) produce the same arrivals.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.workloads.base import Workload, workload_rng
+
+
+def _bucketize(workload: Workload, num_edges: int, num_rounds: int,
+               round_interval: float, seed: int,
+               rng: Optional[np.random.Generator]) -> list[list]:
+    until = num_rounds * round_interval
+    rng = workload_rng(seed) if rng is None else rng
+    buckets: list[list] = [[] for _ in range(num_rounds)]
+    rid = 0
+    for a in workload.arrivals(rng, num_edges, until):
+        if not 0 <= a.edge < num_edges:
+            raise ValueError(f"arrival at t={a.t} targets edge {a.edge}, "
+                             f"outside 0..{num_edges - 1}")
+        row = int(np.ceil(a.t / round_interval)) - 1  # window (r*dt, (r+1)*dt]
+        row = min(max(row, 0), num_rounds - 1)
+        buckets[row].append((a.t, a.edge, a.size, rid))
+        rid += 1
+    return buckets
+
+
+def _pack(buckets: list[list], width: int, overflow: str) -> dict:
+    num_rounds = len(buckets)
+    out = {
+        "t": np.zeros((num_rounds, width), np.float32),
+        "src": np.zeros((num_rounds, width), np.int32),
+        "size": np.zeros((num_rounds, width), np.float32),
+        "mask": np.zeros((num_rounds, width), bool),
+        "rid": np.zeros((num_rounds, width), np.int32),
+    }
+    for r, row in enumerate(buckets):
+        if len(row) > width:
+            if overflow == "error":
+                raise ValueError(
+                    f"round {r} holds {len(row)} arrivals but max_per_round "
+                    f"is {width}; raise max_per_round or pass "
+                    f"overflow='clip'")
+            row = row[:width]  # overflow == "clip": drop the tail
+        for j, (t, edge, size, rid) in enumerate(row):
+            out["t"][r, j] = t
+            out["src"][r, j] = edge
+            out["size"][r, j] = size
+            out["rid"][r, j] = rid
+            out["mask"][r, j] = True
+    return out
+
+
+def materialize_rounds(workload: Workload, num_edges: int, num_rounds: int,
+                       round_interval: float, *, seed: int = 0,
+                       rng: Optional[np.random.Generator] = None,
+                       max_per_round: Optional[int] = None,
+                       overflow: str = "error") -> dict:
+    """Bucket one workload's arrivals over [0, num_rounds * round_interval]
+    into padded per-round arrays (see module docstring for the layout).
+
+    ``max_per_round=None`` sizes the width to the busiest round. With an
+    explicit width, a busier round raises (``overflow='error'``) or drops
+    the excess arrivals (``overflow='clip'`` — acceptable for RL training
+    batches, never for equivalence tests).
+    """
+    if overflow not in ("error", "clip"):
+        raise ValueError(f"unknown overflow policy {overflow!r}")
+    buckets = _bucketize(workload, num_edges, num_rounds, round_interval,
+                         seed, rng)
+    width = (max(1, max(len(b) for b in buckets)) if max_per_round is None
+             else int(max_per_round))
+    return _pack(buckets, width, overflow)
+
+
+def materialize_round_batch(workload: Workload, num_edges: int,
+                            num_rounds: int, round_interval: float,
+                            batch: int, *, base_seed: int = 0,
+                            max_per_round: Optional[int] = None,
+                            overflow: str = "error") -> dict:
+    """Stack ``batch`` independent materializations (seeds base_seed + i)
+    into (B, R, A) arrays for the vmapped engine. With ``max_per_round=None``
+    every element is padded to the batch-wide busiest round."""
+    if overflow not in ("error", "clip"):
+        raise ValueError(f"unknown overflow policy {overflow!r}")
+    all_buckets = [
+        _bucketize(workload, num_edges, num_rounds, round_interval,
+                   base_seed + i, None)
+        for i in range(batch)
+    ]
+    width = (max(1, max(len(b) for bs in all_buckets for b in bs))
+             if max_per_round is None else int(max_per_round))
+    packed = [_pack(bs, width, overflow) for bs in all_buckets]
+    return {k: np.stack([p[k] for p in packed]) for k in packed[0]}

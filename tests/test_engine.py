@@ -1,0 +1,233 @@
+"""Array-native batched engine: equivalence with the event-driven oracle,
+vmap/batching consistency, per-round feature semantics, and the padded
+arrival materializer feeding it."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.state import snapshot_instance
+from repro.serving import (MultiEdgeSim, SimConfig, engine)
+from repro.workloads import PoissonArrivals, scenario
+from repro.workloads.batch import materialize_round_batch, materialize_rounds
+
+Q, ROUNDS, DT = 5, 12, 0.25
+
+
+def _scripted_assign(key, inst):
+    """Deterministic per-request assignment shared by both engines: a hash
+    of the global arrival index spreads requests across all edges (heavy
+    cross-edge transfer traffic, no scheduler tie-break sensitivity)."""
+    del key
+    return (inst["req_rid"] * 7 + 3) % Q
+
+
+class _ScriptedController:
+    """Oracle-side twin of `_scripted_assign`, recording the per-round
+    workload features the CC would feed a scheduler."""
+
+    last_decision_time = 0.0
+
+    def __init__(self):
+        self.features = {}  # round time -> (Q, 3) workload features
+
+    def schedule(self, edges, pending, w, ct):
+        inst = snapshot_instance([e.state for e in edges], pending, w, ct)
+        t = min(r.submit_time for r in pending)  # any time inside the window
+        self.features[int(np.ceil(t / DT)) - 1] = inst["workload"].copy()
+        return [(r, (r.rid * 7 + 3) % Q) for r in pending]
+
+
+def _engine_run(name, seed, assign_fn):
+    arr = materialize_rounds(scenario(name), Q, ROUNDS, DT, seed=seed,
+                             max_per_round=64)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=ROUNDS,
+                              round_interval=DT, max_per_round=64)
+    state = engine.init_state(cfg, seed=seed)
+    run = engine.make_rollout(cfg, assign_fn)
+    final, infos = run(state, arr, jax.random.PRNGKey(0))
+    return arr, jax.device_get(final), jax.device_get(infos)
+
+
+@pytest.mark.parametrize("name", ["uniform_iid", "flash_crowd_10x",
+                                  "mmpp_bursty", "heavy_tail_pareto"])
+def test_trace_equivalence_with_event_sim(name):
+    """The same recorded workload, cluster seed, and per-request assignment
+    through both engines: per-request finish times, per-round completion
+    counts, per-round workload features, and the makespan must agree."""
+    seed = 0
+    arr, final, infos = _engine_run(name, seed, _scripted_assign)
+
+    cc = _ScriptedController()
+    sim = MultiEdgeSim(SimConfig(num_edges=Q, round_interval=DT, seed=seed,
+                                 exec_noise=0.0, phi_oracle=True), cc)
+    m = sim.drive(scenario(name), until=ROUNDS * DT, run_until=1e5, seed=seed)
+
+    mask = arr["mask"].ravel()
+    rids = arr["rid"].ravel()[mask]
+    fin_engine = final["slot_finish"].ravel()[final["slot_edge"].ravel() >= 0]
+    oracle = {r.rid: r.finish_time for e in sim.edges for r in e.completed}
+    assert m["completed"] == m["submitted"] == len(rids) > 0
+    fin_oracle = np.array([oracle[r] for r in rids])
+    np.testing.assert_allclose(fin_engine, fin_oracle, rtol=1e-5, atol=1e-4)
+
+    # identical per-round completion bucketing (same rule on both finish sets)
+    bounds = (np.arange(ROUNDS) + 1) * DT + 1e-6
+    np.testing.assert_array_equal(
+        (fin_engine[None, :] <= bounds[:, None]).sum(-1),
+        (fin_oracle[None, :] <= bounds[:, None]).sum(-1))
+    np.testing.assert_allclose(fin_engine.max(), fin_oracle.max(),
+                               rtol=1e-5, atol=1e-4)
+
+    # workload-state evaluation (c_le, c_in, t_in) agrees round by round
+    assert cc.features  # the oracle scheduled at least one non-empty round
+    for r, wl_oracle in cc.features.items():
+        np.testing.assert_allclose(infos["features"][r], wl_oracle,
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"round {r} features diverged")
+
+
+def test_vmap_batch_matches_unbatched():
+    """Batch-of-1 equals unbatched, and every element of a batched rollout
+    equals its own unbatched rollout (different seeds per element)."""
+    name, seeds = "uniform_iid", [0, 1, 2, 3]
+    arrb = materialize_round_batch(scenario(name), Q, 8, DT, len(seeds),
+                                   base_seed=0, max_per_round=32)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=8, round_interval=DT,
+                              max_per_round=32)
+    run_b = engine.make_rollout(cfg, engine.greedy_assign, batch=True)
+    keys = jax.random.split(jax.random.PRNGKey(0), len(seeds))
+    final_b, _ = run_b(engine.init_batch(cfg, seeds), arrb, keys)
+    final_b = jax.device_get(final_b)
+
+    run_1 = engine.make_rollout(cfg, engine.greedy_assign)
+    for i, seed in enumerate(seeds):
+        arr = {k: v[i] for k, v in arrb.items()}
+        final, _ = run_1(engine.init_state(cfg, seed), arr, keys[i])
+        final = jax.device_get(final)
+        for k in ("slot_finish", "slot_start", "slot_edge", "lane_free"):
+            np.testing.assert_allclose(final_b[k][i], final[k], rtol=1e-6,
+                                       atol=1e-6, err_msg=(k, i))
+
+
+def test_greedy_assign_beats_local_on_hotspot():
+    """All traffic on one edge: greedy insertion must spread it out."""
+    wl = PoissonArrivals(rate=40.0, edge_skew=64.0)
+    arr = materialize_rounds(wl, Q, 8, DT, seed=3)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=8, round_interval=DT,
+                              max_per_round=arr["mask"].shape[-1])
+    out = {}
+    for name, fn in engine.ASSIGN_FNS.items():
+        run = engine.make_rollout(cfg, fn)
+        final, _ = run(engine.init_state(cfg, 3), arr, jax.random.PRNGKey(0))
+        out[name] = engine.summarize(final)
+    assert out["greedy"]["completed"] == out["local"]["completed"] > 0
+    assert out["greedy"]["mean_response"] < out["local"]["mean_response"]
+    assert out["greedy"]["transferred_frac"] > 0.2
+
+
+def test_learn_phi_recovers_true_coefficients():
+    """Online running-sum phi fitting inside the engine: with deterministic
+    affine runtimes the estimate converges to the hidden truth."""
+    arr = materialize_rounds(scenario("uniform_iid"), Q, ROUNDS, DT, seed=5)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=ROUNDS,
+                              round_interval=DT, learn_phi=True,
+                              max_per_round=arr["mask"].shape[-1])
+    state = engine.init_state(cfg, seed=5)
+    assert np.allclose(np.asarray(state["phi_est"]),
+                       np.tile([1.0, 0.0], (Q, 1)))  # cold start
+    run = engine.make_rollout(cfg, engine.local_assign)
+    final, _ = run(state, arr, jax.random.PRNGKey(0))
+    final = jax.device_get(final)
+    fitted = final["phi_n"] >= cfg.phi_min_samples
+    assert fitted.any()
+    np.testing.assert_allclose(final["phi_est"][fitted],
+                               final["phi_true"][fitted], atol=5e-2)
+
+
+def test_policy_assign_runs_in_engine():
+    """Untrained CoRaiS policy as the engine scheduler (plumbing check)."""
+    from repro.core.policy import PolicyConfig, corais_init
+    pcfg = PolicyConfig(d_model=32, ff_hidden=64, edge_layers=1,
+                        request_layers=1)
+    params, pstate = corais_init(jax.random.PRNGKey(0), pcfg)
+    arr = materialize_rounds(scenario("uniform_iid"), Q, 6, DT, seed=0)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=6, round_interval=DT,
+                              max_per_round=arr["mask"].shape[-1])
+    run = engine.make_rollout(
+        cfg, engine.make_policy_assign(params, pstate, pcfg))
+    final, _ = run(engine.init_state(cfg, 0), arr, jax.random.PRNGKey(1))
+    m = engine.summarize(final)
+    assert m["completed"] == m["submitted"] == int(arr["mask"].sum()) > 0
+
+
+def test_engine_cluster_matches_simulator_cluster():
+    """(seed -> cluster) is one function for both engines."""
+    cfg = engine.EngineConfig(num_edges=Q)
+    state = engine.init_state(cfg, seed=7)
+    sim = MultiEdgeSim(SimConfig(num_edges=Q, seed=7),
+                       _ScriptedController())
+    np.testing.assert_allclose(state["w"], sim.w.astype(np.float32))
+    for i, e in enumerate(sim.edges):
+        np.testing.assert_allclose(state["phi_true"][i],
+                                   [e.true_a, e.true_b], rtol=1e-6)
+        assert int(state["replicas"][i]) == e.replicas
+
+
+def test_mismatched_arrival_width_is_rejected():
+    """A width/rounds mismatch between arrivals and the slot table must
+    raise instead of silently misaligning slot rows."""
+    arr = materialize_rounds(scenario("uniform_iid"), Q, 6, DT, seed=0,
+                             max_per_round=16)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=6, max_per_round=8)
+    run = engine.make_rollout(cfg, engine.local_assign)
+    with pytest.raises(ValueError, match="max_per_round"):
+        run(engine.init_state(cfg, 0), arr, jax.random.PRNGKey(0))
+    cfg_short = engine.EngineConfig(num_edges=Q, num_rounds=4,
+                                    max_per_round=16)
+    run_short = engine.make_rollout(cfg_short, engine.local_assign)
+    with pytest.raises(ValueError, match="rounds"):
+        run_short(engine.init_state(cfg_short, 0), arr,
+                  jax.random.PRNGKey(0))
+
+
+# -- padded arrival materialization ------------------------------------------
+
+
+def test_materialize_rounds_windows_and_determinism():
+    wl = scenario("uniform_iid")
+    arr = materialize_rounds(wl, Q, ROUNDS, DT, seed=0)
+    arr2 = materialize_rounds(wl, Q, ROUNDS, DT, seed=0)
+    for k in arr:
+        np.testing.assert_array_equal(arr[k], arr2[k])
+    mask = arr["mask"]
+    assert mask.any()
+    # every arrival sits in its round's window (r*dt, (r+1)*dt]
+    for r in range(ROUNDS):
+        ts = arr["t"][r][mask[r]]
+        assert np.all(ts > r * DT - 1e-9) and np.all(ts <= (r + 1) * DT + 1e-9)
+    # rids are the global time order
+    rids = arr["rid"][mask]
+    np.testing.assert_array_equal(rids, np.arange(mask.sum()))
+    assert np.all(np.diff(arr["t"][mask]) >= 0)
+
+
+def test_materialize_rounds_overflow_policies():
+    wl = PoissonArrivals(rate=200.0)
+    with pytest.raises(ValueError, match="max_per_round"):
+        materialize_rounds(wl, Q, 4, DT, seed=0, max_per_round=2)
+    clipped = materialize_rounds(wl, Q, 4, DT, seed=0, max_per_round=2,
+                                 overflow="clip")
+    assert clipped["mask"].shape == (4, 2)
+    full = materialize_rounds(wl, Q, 4, DT, seed=0)
+    assert clipped["mask"].sum() < full["mask"].sum()
+
+
+def test_materialize_round_batch_shapes():
+    wl = scenario("uniform_iid")
+    arr = materialize_round_batch(wl, Q, 6, DT, 3, base_seed=0)
+    assert arr["mask"].shape[0] == 3 and arr["mask"].shape[1] == 6
+    # element i reproduces the single materialization under seed base+i
+    one = materialize_rounds(wl, Q, 6, DT, seed=1,
+                             max_per_round=arr["mask"].shape[-1])
+    for k in arr:
+        np.testing.assert_array_equal(arr[k][1], one[k])

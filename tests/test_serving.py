@@ -68,6 +68,32 @@ def test_phi_estimator_recovers_coefficients():
     assert b == pytest.approx(0.3, abs=0.05)
 
 
+def test_phi_estimator_running_sums_match_polyfit():
+    """The O(1) running-sum fit must equal np.polyfit over the window at
+    every step, including after the window starts evicting samples."""
+    est = PhiEstimator(min_samples=4, window=64)
+    rng = np.random.default_rng(1)
+    xs, ys = [], []
+    for i in range(200):
+        x = float(rng.uniform(0.1, 2.0))
+        y = float(0.6 * x + 0.2 + rng.normal(0, 0.01))
+        xs.append(x)
+        ys.append(y)
+        est.observe(x, y)
+        if i + 1 >= est.min_samples:
+            a, b = np.polyfit(xs[-est.window:], ys[-est.window:], 1)
+            assert est.a == pytest.approx(float(a), rel=1e-6, abs=1e-9)
+            assert est.b == pytest.approx(float(max(b, 0.0)), rel=1e-6,
+                                          abs=1e-9)
+
+
+def test_phi_estimator_frozen():
+    est = PhiEstimator(a=0.4, b=0.1, frozen=True)
+    for _ in range(32):
+        est.observe(1.0, 5.0)
+    assert est.coefficients == (0.4, 0.1)
+
+
 def test_phi_estimator_degenerate_history():
     est = PhiEstimator(a=2.0, b=0.5)
     for _ in range(20):
