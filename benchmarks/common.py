@@ -70,6 +70,51 @@ def get_trained_policy(en: int = 5, rn: int = 50, batches: int = 800,
     return params, state, cfg
 
 
+def get_temporal_policy(en: int = 5, batches: int = 200,
+                        d_model: int = POLICY_DIM,
+                        scenario_name: str = "uniform_iid",
+                        verbose: bool = True):
+    """Train (or load cached) a CoRaiS policy with temporal REINFORCE on
+    whole engine rollouts (core.train.temporal_train) — the counterpart of
+    :func:`get_trained_policy`'s static i.i.d. snapshots, for the
+    policy-vs-baseline rollout comparison."""
+    from repro.core.policy import corais_init
+    from repro.core.train import TemporalRLConfig, temporal_train
+    from repro.serving.engine import EngineConfig
+
+    cfg = TemporalRLConfig(
+        policy=PolicyConfig(d_model=d_model),
+        engine=EngineConfig(num_edges=en),
+        scenario=scenario_name,
+        batch_size=8,
+        lr=3e-4,
+        num_batches=batches,
+        seed=0,
+    )
+    tag = f"policy_temporal_en{en}_d{d_model}_b{batches}_{scenario_name}"
+    ckpt = Checkpointer(os.path.join(RESULTS, tag), every=10**9,
+                        async_save=False)
+    template = jax.eval_shape(
+        lambda: corais_init(jax.random.PRNGKey(cfg.seed), cfg.policy))
+    restored = ckpt.restore_latest({"params": template[0],
+                                    "state": template[1]})
+    if restored is not None:
+        if verbose:
+            print(f"# loaded cached temporal policy {tag}")
+        return restored["tree"]["params"], restored["tree"]["state"], cfg
+
+    t0 = time.time()
+    cb = (lambda m: print(f"#   batch {m['batch']} cost {m['cost_mean']:.3f}")) \
+        if verbose else None
+    params, state, _, hist = temporal_train(cfg, callback=cb)
+    if verbose:
+        print(f"# temporal-trained {batches} batches in {time.time()-t0:.0f}s "
+              f"(cost {hist[0]['cost_mean']:.3f} -> {hist[-1]['cost_mean']:.3f})")
+    ckpt.save(batches, {"params": params, "state": state})
+    ckpt.wait()
+    return params, state, cfg
+
+
 def eval_instances(en: int, rn: int, n: int, seed: int = 999):
     rng = np.random.default_rng(seed)
     from repro.core import generate_instance

@@ -1,0 +1,182 @@
+"""Real-time decision latency of the unified policy inference stack.
+
+The paper's headline claim is millisecond-level scheduling regardless of
+system scale; this benchmark measures it directly. For every score backend
+(``xla`` einsum head, ``ref`` pure-jnp oracle, ``pallas`` fused kernel —
+interpret mode off-TPU, so CPU numbers for pallas are a correctness path,
+not kernel speed) and every (Q edges, Z requests) scale it times
+
+  * single  — one full scheduling decision (encode + eq 16-17 score +
+              greedy decode) on a compiled fixed-shape instance: mean /
+              p50 / p95 wall latency over ``--reps`` calls, plus the
+              one-off compile time, and
+  * batched — the same decision vmapped over ``--batch`` instances:
+              decisions/sec and scheduled requests/sec.
+
+Writes a JSON report (schema corais.policy_latency.v1) next to the other
+benchmark artifacts.
+
+Run:  PYTHONPATH=src python benchmarks/policy_latency.py
+      PYTHONPATH=src python benchmarks/policy_latency.py \\
+          --backends xla,pallas --scales 10x100,100x1000 --batch 16
+      PYTHONPATH=src python benchmarks/policy_latency.py --smoke   # CI cell
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import InstanceConfig, generate_batch, generate_instance
+from repro.core.inference import make_decision_fn, policy_decide
+from repro.core.policy import (PolicyConfig, corais_init,
+                               list_score_backends)
+
+REPORT_SCHEMA = "corais.policy_latency.v1"
+#: paper scales and beyond: Table II tops out at Q=10, Z=100
+DEFAULT_QS = (5, 10, 50, 100)
+DEFAULT_ZS = (20, 100, 500, 1000)
+
+
+def _percentiles(times_s: list) -> dict:
+    t = np.asarray(times_s) * 1e3
+    return {
+        "mean_ms": float(t.mean()),
+        "p50_ms": float(np.percentile(t, 50)),
+        "p95_ms": float(np.percentile(t, 95)),
+        "max_ms": float(t.max()),
+    }
+
+
+def bench_cell(params, state, pcfg: PolicyConfig, backend: str, q: int,
+               z: int, *, batch: int, reps: int, seed: int = 999) -> dict:
+    """One (backend, Q, Z) cell: single-decision latency + batched
+    throughput on freshly generated instances of that exact scale."""
+    rng = np.random.default_rng(seed)
+    icfg = InstanceConfig(num_edges=q, num_requests=z)
+    inst = jax.tree.map(jnp.asarray, generate_instance(rng, icfg))
+    key = jax.random.PRNGKey(0)
+
+    # the exact compile-once path the serving controller runs
+    decide = make_decision_fn(params, state, pcfg, mode="greedy",
+                              backend=backend)
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(decide(inst, key))
+    compile_s = time.perf_counter() - t0
+
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(decide(inst, key))
+        times.append(time.perf_counter() - t0)
+    single = _percentiles(times)
+    single["compile_s"] = compile_s
+
+    cell = {"backend": backend, "num_edges": q, "num_requests": z,
+            "single": single}
+
+    if batch > 0:
+        binst = jax.tree.map(jnp.asarray, generate_batch(rng, icfg, batch))
+        keys = jax.random.split(key, batch)
+        vdecide = jax.jit(jax.vmap(
+            lambda i, k: policy_decide(k, params, state, i, pcfg,
+                                       mode="greedy", backend=backend)))
+        jax.block_until_ready(vdecide(binst, keys))  # compile
+        btimes = []
+        for _ in range(max(1, reps // 2)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(vdecide(binst, keys))
+            btimes.append(time.perf_counter() - t0)
+        wall = float(np.mean(btimes))
+        cell["batched"] = {
+            "batch": batch,
+            "wall_ms": wall * 1e3,
+            "decisions_per_s": batch / wall,
+            "requests_per_s": batch * z / wall,
+        }
+    return cell
+
+
+def run(backends, scales, *, d_model: int, batch: int, reps: int,
+        seed: int = 0, verbose: bool = True) -> dict:
+    pcfg = PolicyConfig(d_model=d_model)
+    params, state = corais_init(jax.random.PRNGKey(seed), pcfg)
+    cells = []
+    for backend in backends:
+        for q, z in scales:
+            cell = bench_cell(params, state, pcfg, backend, q, z,
+                              batch=batch, reps=reps)
+            cells.append(cell)
+            if verbose:
+                s, b = cell["single"], cell.get("batched")
+                line = (f"  {backend:7s} Q={q:4d} Z={z:5d} "
+                        f"mean={s['mean_ms']:8.3f}ms p95={s['p95_ms']:8.3f}ms")
+                if b:
+                    line += (f"  batched[{b['batch']}]="
+                             f"{b['decisions_per_s']:8.1f} dec/s "
+                             f"{b['requests_per_s']:10.0f} req/s")
+                print(line)
+    return {
+        "schema": REPORT_SCHEMA,
+        "config": {
+            "backends": list(backends),
+            "scales": [list(s) for s in scales],
+            "d_model": d_model, "batch": batch, "reps": reps,
+            "device": jax.devices()[0].platform,
+            "pallas_interpret": jax.default_backend() != "tpu",
+        },
+        "cells": cells,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default="xla,ref,pallas",
+                    help=f"comma list from: {','.join(list_score_backends())}")
+    ap.add_argument("--scales", default=None,
+                    help="comma list of QxZ (default: full paper matrix "
+                         f"{'x'.join(map(str, DEFAULT_QS))} x "
+                         f"{'x'.join(map(str, DEFAULT_ZS))})")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="batched-throughput width (0 disables)")
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI cell: tiny model, small scales, all backends")
+    ap.add_argument("--out", default=None,
+                    help="report path (default results/policy_latency.json)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        backends = list_score_backends()
+        scales = [(5, 20), (10, 50)]
+        d_model, batch, reps = 32, 4, 3
+    else:
+        backends = args.backends.split(",")
+        if args.scales:
+            scales = [tuple(map(int, s.split("x")))
+                      for s in args.scales.split(",")]
+        else:
+            scales = [(q, z) for q in DEFAULT_QS for z in DEFAULT_ZS]
+        d_model, batch, reps = args.d_model, args.batch, args.reps
+
+    print(f"== policy decision latency: {len(backends)} backends x "
+          f"{len(scales)} scales (d_model={d_model}) ==")
+    report = run(backends, scales, d_model=d_model, batch=batch, reps=reps)
+
+    out = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                   "results", "policy_latency.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"== report written to {os.path.abspath(out)} ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,10 +26,16 @@ import numpy as np
 
 from repro.serving import (ASSIGN_FNS, CentralController, EngineConfig,
                            MultiEdgeSim, SimConfig, init_batch, make_rollout,
-                           summarize)
+                           resolve_assign_fn, summarize)
 from repro.workloads import materialize_round_batch, scenario
 
 REPORT_SCHEMA = "corais.rollout_throughput.v1"
+
+#: heuristic backends only: this benchmark pairs each engine backend with
+#: the event-driven controller by name, and the policy factory needs
+#: trained params (see benchmarks/policy_latency.py for policy timing)
+BACKENDS = sorted(k for k, v in ASSIGN_FNS.items()
+                  if not getattr(v, "_assign_factory", False))
 
 
 def bench_event_sim(name: str, backend: str, num_edges: int, rounds: int,
@@ -66,7 +72,7 @@ def bench_engine(name: str, backend: str, num_edges: int, rounds: int,
                        max_per_round=arrivals["mask"].shape[-1])
     state0 = init_batch(cfg, range(seed, seed + batch))
     keys = jax.random.split(jax.random.PRNGKey(seed), batch)
-    run = make_rollout(cfg, ASSIGN_FNS[backend], batch=True)
+    run = make_rollout(cfg, resolve_assign_fn(backend), batch=True)
 
     t0 = time.perf_counter()
     jax.block_until_ready(run(state0, arrivals, keys))
@@ -95,8 +101,7 @@ def bench_engine(name: str, backend: str, num_edges: int, rounds: int,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="uniform_iid")
-    ap.add_argument("--backend", default="greedy",
-                    choices=sorted(ASSIGN_FNS))
+    ap.add_argument("--backend", default="greedy", choices=BACKENDS)
     ap.add_argument("--edges", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--interval", type=float, default=0.25)

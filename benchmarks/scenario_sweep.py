@@ -11,6 +11,9 @@ Run:  PYTHONPATH=src python benchmarks/scenario_sweep.py
           --backends greedy,local,random,corais --batches 800
       PYTHONPATH=src python benchmarks/scenario_sweep.py \\
           --backends greedy,batched-greedy,batched-local
+      # policy-vs-baseline rollout comparison on paired engine episodes:
+      PYTHONPATH=src python benchmarks/scenario_sweep.py \\
+          --backends batched-local,batched-greedy,batched-corais,batched-corais-temporal
 
 ``corais`` trains (or loads a cached) policy via benchmarks.common first;
 the heuristic backends need no training and finish in seconds. A
@@ -18,6 +21,10 @@ the heuristic backends need no training and finish in seconds. A
 engine (repro.serving.engine, online phi fitting on) instead of the
 event-driven simulator — same cluster seed and arrival stream, so its cells
 are directly comparable to the event-driven columns.
+``batched-corais-temporal`` selects the temporal policy (REINFORCE on
+whole engine rollouts) instead of the static-trained one, so its column
+against ``batched-corais`` / ``batched-greedy`` / ``batched-local`` is the
+ROADMAP's policy-vs-baseline rollout benchmark.
 """
 from __future__ import annotations
 
@@ -30,7 +37,7 @@ import jax
 
 from repro.serving import (ASSIGN_FNS, CentralController, EngineConfig,
                            MultiEdgeSim, SimConfig, init_batch,
-                           make_policy_assign, make_rollout, summarize)
+                           make_rollout, resolve_assign_fn, summarize)
 from repro.workloads import list_scenarios, materialize_round_batch, scenario
 
 REPORT_SCHEMA = "corais.scenario_sweep.v1"
@@ -48,18 +55,35 @@ def _make_controller(backend: str, num_edges: int, batches: int,
     return CentralController(scheduler=backend)
 
 
+#: batched-* inner names that resolve to a trained policy AssignFn:
+#: static-trained (paper §IV-B i.i.d. snapshots) greedy/sampling decode,
+#: and the temporal policy trained on whole engine rollouts — the
+#: policy-vs-baseline rollout comparison runs these against batched-greedy
+#: / batched-local on paired episodes.
+POLICY_BACKENDS = ("corais", "corais-sample", "corais-temporal", "policy")
+
+
 def _engine_assign_fn(inner: str, num_edges: int, batches: int):
-    if inner in ("corais", "corais-sample"):
-        from benchmarks.common import get_trained_policy
-        params, state, cfg = get_trained_policy(num_edges, 50, batches,
-                                                verbose=False)
-        mode = "sample" if inner == "corais-sample" else "greedy"
-        return make_policy_assign(params, state, cfg.policy, mode=mode)
-    if inner not in ASSIGN_FNS:
-        known = sorted(ASSIGN_FNS) + ["corais", "corais-sample"]
-        raise ValueError(f"no batched-engine backend {inner!r}; "
-                         f"supported: {', '.join('batched-' + k for k in known)}")
-    return ASSIGN_FNS[inner]
+    if inner in POLICY_BACKENDS:
+        if inner == "corais-temporal":
+            from benchmarks.common import get_temporal_policy
+            params, state, cfg = get_temporal_policy(num_edges, batches,
+                                                     verbose=False)
+            mode = "greedy"
+        else:
+            from benchmarks.common import get_trained_policy
+            params, state, cfg = get_trained_policy(num_edges, 50, batches,
+                                                    verbose=False)
+            mode = "sample" if inner == "corais-sample" else "greedy"
+        return resolve_assign_fn("policy", params=params, policy_state=state,
+                                 policy_cfg=cfg.policy, mode=mode)
+    try:
+        return resolve_assign_fn(inner)
+    except ValueError:
+        known = sorted(set(ASSIGN_FNS) - {"policy"}) + list(POLICY_BACKENDS)
+        raise ValueError(
+            f"no batched-engine backend {inner!r}; supported: "
+            f"{', '.join('batched-' + k for k in known)}") from None
 
 
 def _run_batched(backend: str, name: str, *, num_edges: int, until: float,
@@ -99,8 +123,7 @@ def run_sweep(scenarios: list[str], backends: list[str], *, num_edges: int = 5,
     for backend in backends:  # fail fast, before any cell is computed
         if backend.startswith("batched-"):
             inner = backend.split("-", 1)[1]
-            if inner not in ASSIGN_FNS and inner not in ("corais",
-                                                         "corais-sample"):
+            if inner not in ASSIGN_FNS and inner not in POLICY_BACKENDS:
                 _engine_assign_fn(inner, num_edges, batches)  # raises
     cells = {}
     winners = {}

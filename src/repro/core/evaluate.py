@@ -11,10 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import instances as inst_lib
-from repro.core.decode import greedy_decode, sampling_decode
 from repro.core.heuristics import solve_ils, solve_local, solve_random
+from repro.core.inference import make_decision_fn
 from repro.core.objective import makespan_np
-from repro.core.policy import PolicyConfig, corais_apply
+from repro.core.policy import PolicyConfig
 from repro.serving import engine as engine_lib
 from repro.workloads import materialize_round_batch
 
@@ -28,32 +28,20 @@ class MethodResult:
     solved_frac: float = 1.0
 
 
-def _policy_method(params, state, cfg: PolicyConfig, mode: str, n: int, seed: int):
-    """Returns fn(inst) -> (assign, solve_time). jit once, reuse across
-    instances of identical padded shape (the paper's real-time setting)."""
-
-    @jax.jit
-    def forward(inst):
-        lp, _ = corais_apply(params, state, inst, cfg, training=False)
-        return lp
-
-    @jax.jit
-    def decode_sample(inst, lp, key):
-        assign, cost = sampling_decode(key, inst, lp, n)
-        return assign
-
+def _policy_method(params, state, cfg: PolicyConfig, mode: str, n: int,
+                   seed: int, backend: str = None):
+    """Returns fn(inst) -> (assign, solve_time). The shared decision path
+    (core.inference) jits once and is reused across instances of identical
+    padded shape (the paper's real-time setting)."""
+    decide = make_decision_fn(params, state, cfg, mode=mode, num_samples=n,
+                              backend=backend)
     key_holder = [jax.random.PRNGKey(seed)]
 
     def run(inst):
         jinst = jax.tree.map(jnp.asarray, inst)
+        key_holder[0], sub = jax.random.split(key_holder[0])
         t0 = time.perf_counter()
-        lp = forward(jinst)
-        if mode == "greedy":
-            assign = greedy_decode(lp)
-        else:
-            key_holder[0], sub = jax.random.split(key_holder[0])
-            assign = decode_sample(jinst, lp, sub)
-        assign = np.asarray(jax.block_until_ready(assign))
+        assign = np.asarray(jax.block_until_ready(decide(jinst, sub)))
         return assign, time.perf_counter() - t0
 
     return run
@@ -143,7 +131,11 @@ def evaluate_rollouts(
 ) -> dict[str, RolloutResult]:
     """Run every scheduling backend over the same ``batch`` scenario
     episodes (paired clusters and arrival streams) on the batched engine;
-    the temporal counterpart of :func:`evaluate_methods`."""
+    the temporal counterpart of :func:`evaluate_methods`.
+
+    ``assign_fns`` values may be AssignFns (e.g. from
+    ``engine.make_policy_assign``) or registered engine backend names
+    (resolved through ``engine.resolve_assign_fn``)."""
     arrivals = materialize_round_batch(
         workload, cfg.num_edges, cfg.num_rounds, cfg.round_interval, batch,
         base_seed=base_seed)
@@ -151,6 +143,8 @@ def evaluate_rollouts(
     keys = jax.random.split(jax.random.PRNGKey(seed), batch)
     results = {}
     for name, fn in assign_fns.items():
+        if isinstance(fn, str):
+            fn = engine_lib.resolve_assign_fn(fn)
         run = engine_lib.make_rollout(cfg, fn, batch=True)
         jax.block_until_ready(run(state0, arrivals, keys))  # compile
         t0 = time.perf_counter()

@@ -1,0 +1,86 @@
+"""Unified real-time decision path (paper §IV-C + Fig. 2 step iv).
+
+Every consumer of the trained policy — the batched rollout engine, the
+event-driven serving controller, and the evaluation harness — makes a
+scheduling decision the same way: one mask-invariant, fixed-shape forward
+(:func:`repro.core.policy.corais_encode` + :func:`corais_score`) followed
+by a decode (greedy argmax or best-of-n sampling). This module is that
+single path; nothing outside it re-implements "forward + decode".
+
+Three entry points, one semantics:
+
+    policy_decide     — pure function, safe under jit/vmap/scan (the
+                        engine's per-round scheduler body)
+    make_policy_assign— closure matching the engine's AssignFn signature
+                        (registered as ``ASSIGN_FNS["policy"]``)
+    make_decision_fn  — jitted host-side decision function for the
+                        controller / latency benchmarks (fixed padded
+                        shapes, compile once, reuse every round)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decode import greedy_decode, sampling_decode
+from repro.core.policy import PolicyConfig, corais_apply
+
+DECODE_MODES = ("greedy", "sample")
+
+
+def policy_decide(key, params, policy_state, inst, cfg: PolicyConfig, *,
+                  mode: str = "greedy", num_samples: int = 64,
+                  backend: Optional[str] = None) -> jax.Array:
+    """One full scheduling decision on a frozen instance: (Z,) int32
+    execution edge per request. ``mode="greedy"`` ignores ``key``;
+    ``mode="sample"`` draws ``num_samples`` complete decisions and keeps
+    the cheapest (eq 19), greedy included as a candidate."""
+    if mode not in DECODE_MODES:
+        raise ValueError(f"unknown decode mode {mode!r}; "
+                         f"supported: {', '.join(DECODE_MODES)}")
+    log_probs, _ = corais_apply(params, policy_state, inst, cfg,
+                                training=False, backend=backend)
+    if mode == "greedy":
+        return greedy_decode(log_probs)
+    assign, _ = sampling_decode(key, inst, log_probs, num_samples)
+    return assign.astype(jnp.int32)
+
+
+def make_policy_assign(params, policy_state, policy_cfg: PolicyConfig,
+                       mode: str = "greedy", num_samples: int = 64,
+                       backend: Optional[str] = None):
+    """The CoRaiS policy as an engine scheduler: AssignFn(key, inst).
+
+    The closure stays un-jitted so the engine can trace it inside its own
+    jitted/vmapped rollout; the whole rollout then compiles end-to-end over
+    the instance axis, fused scoring kernel included."""
+
+    def fn(key, inst):
+        return policy_decide(key, params, policy_state, inst, policy_cfg,
+                             mode=mode, num_samples=num_samples,
+                             backend=backend)
+
+    return fn
+
+
+# engine.resolve_assign_fn treats registry entries tagged this way as
+# factories to be built with policy kwargs rather than called per round
+make_policy_assign._assign_factory = True
+
+
+def make_decision_fn(params, policy_state, cfg: PolicyConfig, *,
+                     mode: str = "greedy", num_samples: int = 64,
+                     backend: Optional[str] = None):
+    """Compile-once decision function ``decide(inst, key) -> (Z,) int32``
+    for the real-time serving path: pad snapshots to a constant shape and
+    every round after the first runs at kernel latency."""
+
+    @jax.jit
+    def decide(inst, key):
+        return policy_decide(key, params, policy_state, inst, cfg,
+                             mode=mode, num_samples=num_samples,
+                             backend=backend)
+
+    return decide

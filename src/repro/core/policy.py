@@ -7,6 +7,17 @@ align heterogeneous features; the context decoder attends the system context
 (eqs 12-17). One forward pass yields the full factorized scheduling
 distribution, so S-sample RL (§IV-B) needs exactly one network evaluation.
 
+The forward is split into two shared entry points used identically by
+training, the batched rollout engine, and the serving controller:
+
+    corais_encode  — encoders + context decoder -> (c_emb, h_emb, state)
+    corais_score   — the eq 16-17 head, dispatching over SCORE_BACKENDS
+                     ("xla" einsum head | "ref" pure-jnp oracle | "pallas"
+                     fused kernel with custom VJP); every implementation
+                     lives in repro.kernels, nothing re-derives the math.
+
+``corais_apply`` = encode + score and remains the one-call forward.
+
 The encoder sublayer alignment mechanism is pluggable ("mha" | "mlp") to
 realize the paper's FC1/FC2/FC3 ablation baselines with parameter-matched
 MLPs (see core/ablations.py).
@@ -14,7 +25,7 @@ MLPs (see core/ablations.py).
 from __future__ import annotations
 
 import dataclasses
-import math
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +60,7 @@ class PolicyConfig:
     edge_align: str = "mha"     # "mha" (CoRaiS) | "mlp" (FC1/FC3)
     req_align: str = "mha"      # "mha" (CoRaiS) | "mlp" (FC2/FC3)
     feature_scale: float = 0.1  # static input scaling for workload features
+    score_backend: str = "xla"  # eq 16-17 head: "xla" | "ref" | "pallas"
 
 
 # ---------------------------------------------------------------------------
@@ -199,8 +211,14 @@ def _masked_max(x, mask):
     return jnp.max(jnp.where(mask[..., None], x, -jnp.inf), axis=-2)
 
 
-def corais_apply(params, state, inst, cfg: PolicyConfig, *, training: bool = False):
-    """Returns (log_probs, new_state); log_probs: (..., Z, Q) log a_qz."""
+def corais_encode(params, state, inst, cfg: PolicyConfig, *,
+                  training: bool = False):
+    """Encoders + context decoder (eqs 12-15): the mask-invariant, fixed-
+    shape front half of the forward.
+
+    Returns (c_emb, h_emb, new_state): c_emb (..., Q, d) context-decoded
+    edge embeddings, h_emb (..., Z, d) request embeddings. Feed both to
+    :func:`corais_score` for the eq 16-17 head."""
     emask = inst["edge_mask"]
     rmask = inst["req_mask"]
 
@@ -228,12 +246,84 @@ def corais_apply(params, state, inst, cfg: PolicyConfig, *, training: bool = Fal
     c = mha_apply(
         params["ctx_mha"], q_ctx, kv_in=h, mask=ctx_mask, num_heads=cfg.num_heads
     )  # (..., Q, d)
+    return c, h, {"edge_layers": est, "req_layers": rst}
 
-    px = c @ params["w_px"]
-    py = h @ params["w_py"]
-    u = jnp.einsum("...qd,...zd->...qz", px, py) / math.sqrt(cfg.d_model)
-    imp = cfg.tanh_clip * jnp.tanh(u)  # eq (16)
-    imp = jnp.where(emask[..., :, None], imp, -1e9)
-    log_probs = jax.nn.log_softmax(imp, axis=-2)  # eq (17): softmax over edges
-    log_probs = jnp.swapaxes(log_probs, -1, -2)  # (..., Z, Q)
-    return log_probs, {"edge_layers": est, "req_layers": rst}
+
+# ---------------------------------------------------------------------------
+# eq 16-17 head: one registry, three backends, zero duplicated math
+# ---------------------------------------------------------------------------
+
+
+def _score_xla(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip):
+    from repro.kernels import ref
+    return ref.policy_score_xla(c_emb, h_emb, w_px, w_py, edge_mask,
+                                tanh_clip)
+
+
+def _score_ref(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip):
+    from repro.kernels import ref
+    if c_emb.ndim == 2:
+        return ref.policy_score_ref(c_emb, h_emb, w_px, w_py, edge_mask,
+                                    tanh_clip)
+    batch = c_emb.shape[:-2]
+    q = c_emb.shape[-2]
+    cf = c_emb.reshape((-1,) + c_emb.shape[-2:])
+    hf = h_emb.reshape((-1,) + h_emb.shape[-2:])
+    mf = jnp.broadcast_to(edge_mask, batch + (q,)).reshape((-1, q))
+    out = jax.vmap(
+        lambda c, h, m: ref.policy_score_ref(c, h, w_px, w_py, m, tanh_clip)
+    )(cf, hf, mf)
+    return out.reshape(batch + out.shape[-2:])
+
+
+def _score_pallas(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip):
+    from repro.kernels import ops
+    return ops.policy_score(c_emb, h_emb, w_px, w_py, edge_mask,
+                            tanh_clip=tanh_clip)
+
+
+#: name -> fn(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip) -> (..., Z, Q)
+SCORE_BACKENDS: dict[str, Callable] = {
+    "xla": _score_xla,        # batched einsum head (kernels/ref.py)
+    "ref": _score_ref,        # per-instance pure-jnp oracle (kernels/ref.py)
+    "pallas": _score_pallas,  # fused kernel + custom VJP (kernels/policy_score.py)
+}
+
+
+def register_score_backend(name: str, fn: Callable) -> None:
+    """Register a scoring implementation (see SCORE_BACKENDS signature)."""
+    SCORE_BACKENDS[name] = fn
+
+
+def list_score_backends() -> list[str]:
+    return sorted(SCORE_BACKENDS)
+
+
+def corais_score(params, c_emb, h_emb, edge_mask, cfg: PolicyConfig, *,
+                 backend: str | None = None):
+    """The eq 16-17 head on encoder outputs: log a_qz as (..., Z, Q).
+
+    ``backend`` overrides ``cfg.score_backend``; every implementation is
+    registered in :data:`SCORE_BACKENDS` and lives in :mod:`repro.kernels`.
+    """
+    name = backend or cfg.score_backend
+    try:
+        fn = SCORE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown score backend {name!r}; registered: "
+            f"{', '.join(list_score_backends())}") from None
+    return fn(c_emb, h_emb, params["w_px"], params["w_py"], edge_mask,
+              cfg.tanh_clip)
+
+
+def corais_apply(params, state, inst, cfg: PolicyConfig, *,
+                 training: bool = False, backend: str | None = None):
+    """Full forward = corais_encode + corais_score.
+
+    Returns (log_probs, new_state); log_probs: (..., Z, Q) log a_qz."""
+    c, h, new_state = corais_encode(params, state, inst, cfg,
+                                    training=training)
+    log_probs = corais_score(params, c, h, inst["edge_mask"], cfg,
+                             backend=backend)
+    return log_probs, new_state

@@ -23,7 +23,8 @@ import numpy as np
 from repro.core import instances as inst_lib
 from repro.core.decode import assignment_log_prob, greedy_decode
 from repro.core.objective import makespan
-from repro.core.policy import PolicyConfig, corais_apply, corais_init
+from repro.core.policy import (PolicyConfig, corais_encode, corais_init,
+                               corais_score)
 from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
 from repro.serving import engine as engine_lib
 from repro.serving.engine import EngineConfig
@@ -48,9 +49,12 @@ class RLConfig:
 def rl_loss(params, state, batch, sample_key, cfg: RLConfig):
     """Surrogate loss over a batch of instances. batch leaves have a leading
     batch axis; returns (loss, aux)."""
-    log_probs, new_state = corais_apply(
-        params, state, batch, cfg.policy, training=True
-    )  # (B, Z, Q)
+    # shared inference stack: one encode, one eq 16-17 score (the head's
+    # backend — xla / ref / pallas — is cfg.policy.score_backend)
+    c_emb, h_emb, new_state = corais_encode(
+        params, state, batch, cfg.policy, training=True)
+    log_probs = corais_score(params, c_emb, h_emb, batch["edge_mask"],
+                             cfg.policy)  # (B, Z, Q)
     rmask = batch["req_mask"]
 
     # --- S samples from the factorized policy (no grad through sampling).
@@ -109,7 +113,10 @@ def make_train_step(cfg: RLConfig, adam_cfg: Optional[AdamConfig] = None):
 
 def greedy_eval(params, state, batch, cfg: RLConfig) -> jax.Array:
     """Mean greedy makespan on a batch (no sampling)."""
-    log_probs, _ = corais_apply(params, state, batch, cfg.policy, training=False)
+    c_emb, h_emb, _ = corais_encode(params, state, batch, cfg.policy,
+                                    training=False)
+    log_probs = corais_score(params, c_emb, h_emb, batch["edge_mask"],
+                             cfg.policy)
     return jnp.mean(makespan(batch, greedy_decode(log_probs)))
 
 
@@ -208,8 +215,10 @@ def temporal_rl_loss(params, policy_state, sim_state, arrivals, sample_key,
         inst = inst_fn(sim, arr)
         # eval-mode norm statistics: rounds of one rollout are far from
         # i.i.d., so running batchnorm stats are not updated here.
-        log_probs, _ = corais_apply(params, policy_state, inst, cfg.policy,
-                                    training=False)  # (B, A, Q)
+        c_emb, h_emb, _ = corais_encode(params, policy_state, inst,
+                                        cfg.policy, training=False)
+        log_probs = corais_score(params, c_emb, h_emb, inst["edge_mask"],
+                                 cfg.policy)  # (B, A, Q)
         act = jax.random.categorical(
             sub, jax.lax.stop_gradient(log_probs), axis=-1).astype(jnp.int32)
         logp = assignment_log_prob(log_probs, act, inst["req_mask"])  # (B,)

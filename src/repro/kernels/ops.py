@@ -43,6 +43,7 @@ def mamba_scan(u, dt, B_mat, C_mat, A, *, chunk=128, bd=256):
 
 @partial(jax.jit, static_argnames=("tanh_clip", "bz"))
 def policy_score(c_emb, h_emb, w_px, w_py, edge_mask, *, tanh_clip=10.0, bz=256):
+    """Fused eq 16-17 head: any leading batch shape, custom-VJP backward."""
     return policy_score_fwd(c_emb, h_emb, w_px, w_py, edge_mask,
                             tanh_clip=tanh_clip, bz=bz, interpret=interpret_mode())
 

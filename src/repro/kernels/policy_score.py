@@ -3,10 +3,23 @@
 The real-time hot path of the scheduler: two projections, the (Z, Q)
 compatibility matmul, C*tanh clipping, edge masking and the log-softmax
 over edges — fused into one kernel so the intermediate (Z, Q) score matrix
-never round-trips HBM. Blocked over requests (Z); the edge-context block
-(Q <= 128 edges, d <= 512) and both projection matrices stay resident in
-VMEM across the sweep. On the Table-II scales (Q <= 10, Z <= 100, d = 256)
-the entire problem is a single block.
+never round-trips HBM. The kernel carries a leading batch axis (grid
+(B, Z-blocks)) and a ``custom_vjp`` backward (also a fused Pallas kernel),
+so it composes with ``vmap`` / ``grad`` — batched engine rollouts and
+REINFORCE both run straight through it, and interpret mode executes the
+same bodies on CPU.
+
+Forward is blocked over requests (Z); the edge-context block (Q <= 128
+edges, d <= 512) and both projection matrices stay resident in VMEM across
+the sweep. On the Table-II scales (Q <= 10, Z <= 100, d = 256) the entire
+problem is a single block. The backward kernel processes one batch element
+per grid step (whole (Z, d) block; fine to a few thousand requests at
+d = 256 within the ~16 MB VMEM budget) and recomputes the compatibility
+matrix flash-attention-style instead of saving it.
+
+Neither kernel body reads ``pl.program_id``: all indexing lives in the
+BlockSpec index maps, which keeps the kernels correct under ``vmap``'s
+pallas batching rule (it prepends a fresh grid dimension).
 """
 from __future__ import annotations
 
@@ -18,46 +31,152 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(c_ref, h_ref, wpx_ref, wpy_ref, mask_ref, o_ref, *,
-            scale: float, tanh_clip: float):
-    c = c_ref[...].astype(jnp.float32)        # (Q, d)
-    h = h_ref[...].astype(jnp.float32)        # (bz, d)
+def _fwd_kernel(c_ref, h_ref, wpx_ref, wpy_ref, mask_ref, o_ref, *,
+                scale: float, tanh_clip: float):
+    c = c_ref[0].astype(jnp.float32)          # (Q, d)
+    h = h_ref[0].astype(jnp.float32)          # (bz, d)
     px = jax.lax.dot(c, wpx_ref[...].astype(jnp.float32))   # (Q, d)
     py = jax.lax.dot(h, wpy_ref[...].astype(jnp.float32))   # (bz, d)
     u = jax.lax.dot_general(py, px, (((1,), (1,)), ((), ()))) * scale  # (bz, Q)
     imp = tanh_clip * jnp.tanh(u)
-    imp = jnp.where(mask_ref[...][None, :], imp, -1e9)
+    imp = jnp.where(mask_ref[0][None, :] > 0.5, imp, -1e9)
     m = jnp.max(imp, axis=1, keepdims=True)
     lse = jnp.log(jnp.sum(jnp.exp(imp - m), axis=1, keepdims=True)) + m
-    o_ref[...] = (imp - lse).astype(o_ref.dtype)
+    o_ref[0] = (imp - lse).astype(o_ref.dtype)
+
+
+def _bwd_kernel(g_ref, o_ref, c_ref, h_ref, wpx_ref, wpy_ref, mask_ref,
+                dc_ref, dh_ref, dwx_ref, dwy_ref, *,
+                scale: float, tanh_clip: float):
+    g = g_ref[0].astype(jnp.float32)          # (Z, Q) cotangent of log a
+    out = o_ref[0].astype(jnp.float32)        # (Z, Q) saved log-probs
+    c = c_ref[0].astype(jnp.float32)          # (Q, d)
+    h = h_ref[0].astype(jnp.float32)          # (Z, d)
+    wx = wpx_ref[...].astype(jnp.float32)
+    wy = wpy_ref[...].astype(jnp.float32)
+    keep = mask_ref[0][None, :] > 0.5         # (1, Q)
+
+    # d log_softmax: g - softmax * sum_q g  (softmax = exp(saved log-probs))
+    gi = g - jnp.exp(out) * jnp.sum(g, axis=1, keepdims=True)
+    # recompute the compatibility matrix (cheaper than saving (Z, Q) twice)
+    px = jax.lax.dot(c, wx)                   # (Q, d)
+    py = jax.lax.dot(h, wy)                   # (Z, d)
+    u = jax.lax.dot_general(py, px, (((1,), (1,)), ((), ()))) * scale
+    th = jnp.tanh(u)
+    # masked edges saw a constant -1e9: no gradient flows through them
+    gu = jnp.where(keep, gi * (tanh_clip * scale) * (1.0 - th * th), 0.0)
+
+    dpy = jax.lax.dot(gu, px)                                          # (Z, d)
+    dpx = jax.lax.dot_general(gu, py, (((0,), (0,)), ((), ())))        # (Q, d)
+    dc_ref[0] = jax.lax.dot_general(dpx, wx, (((1,), (1,)), ((), ())))
+    dh_ref[0] = jax.lax.dot_general(dpy, wy, (((1,), (1,)), ((), ())))
+    dwx_ref[0] = jax.lax.dot_general(c, dpx, (((0,), (0,)), ((), ())))
+    dwy_ref[0] = jax.lax.dot_general(h, dpy, (((0,), (0,)), ((), ())))
+
+
+def _pad_z(x, bz: int):
+    pad = (-x.shape[1]) % bz
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _policy_score(c_emb, h_emb, w_px, w_py, maskf, tanh_clip, bz, interpret):
+    out, _ = _policy_score_fwd(c_emb, h_emb, w_px, w_py, maskf,
+                               tanh_clip, bz, interpret)
+    return out
+
+
+def _policy_score_fwd(c_emb, h_emb, w_px, w_py, maskf, tanh_clip, bz,
+                      interpret):
+    b, q, d = c_emb.shape
+    z = h_emb.shape[1]
+    bz = min(bz, z)
+    hp = _pad_z(h_emb, bz)
+    nz = hp.shape[1] // bz
+    kernel = functools.partial(_fwd_kernel, scale=1.0 / math.sqrt(d),
+                               tanh_clip=tanh_clip)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, nz),
+        in_specs=[
+            pl.BlockSpec((1, q, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bz, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((d, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((d, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, q), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bz, q), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hp.shape[1], q), jnp.float32),
+        interpret=interpret,
+    )(c_emb, hp, w_px, w_py, maskf)
+    out = out[:, :z]
+    return out, (c_emb, h_emb, w_px, w_py, maskf, out)
+
+
+def _policy_score_bwd(tanh_clip, bz, interpret, res, g):
+    c_emb, h_emb, w_px, w_py, maskf, out = res
+    b, q, d = c_emb.shape
+    z = h_emb.shape[1]
+    # Zero-padded rows carry zero cotangent, so they contribute nothing.
+    gp = _pad_z(g.astype(jnp.float32), 8)
+    op = _pad_z(out, 8)
+    hp = _pad_z(h_emb, 8)
+    zp = hp.shape[1]
+    kernel = functools.partial(_bwd_kernel, scale=1.0 / math.sqrt(d),
+                               tanh_clip=tanh_clip)
+    dc, dh, dwx, dwy = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, zp, q), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, zp, q), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, zp, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, q), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, zp, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, q, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, zp, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gp, op, c_emb, hp, w_px, w_py, maskf)
+    return (dc.astype(c_emb.dtype), dh[:, :z].astype(h_emb.dtype),
+            jnp.sum(dwx, 0).astype(w_px.dtype),
+            jnp.sum(dwy, 0).astype(w_py.dtype), jnp.zeros_like(maskf))
+
+
+_policy_score.defvjp(_policy_score_fwd, _policy_score_bwd)
 
 
 def policy_score_fwd(c_emb, h_emb, w_px, w_py, edge_mask, *,
                      tanh_clip: float = 10.0, bz: int = 256,
                      interpret: bool = False):
-    """c_emb: (Q, d); h_emb: (Z, d); w_px/w_py: (d, d); edge_mask: (Q,) bool.
-    Returns log a_qz as (Z, Q)."""
-    q, d = c_emb.shape
-    z = h_emb.shape[0]
-    bz = min(bz, z)
-    pad_z = (-z) % bz
-    if pad_z:
-        h_emb = jnp.pad(h_emb, ((0, pad_z), (0, 0)))
-    zp = z + pad_z
-    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(d),
-                               tanh_clip=tanh_clip)
-    out = pl.pallas_call(
-        kernel,
-        grid=(zp // bz,),
-        in_specs=[
-            pl.BlockSpec((q, d), lambda i: (0, 0)),
-            pl.BlockSpec((bz, d), lambda i: (i, 0)),
-            pl.BlockSpec((d, d), lambda i: (0, 0)),
-            pl.BlockSpec((d, d), lambda i: (0, 0)),
-            pl.BlockSpec((q,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((bz, q), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((zp, q), jnp.float32),
-        interpret=interpret,
-    )(c_emb, h_emb, w_px, w_py, edge_mask)
-    return out[:z]
+    """Fused log a_qz (paper eq 17) with any leading batch shape.
+
+    c_emb: (..., Q, d) context-decoder edge embeddings; h_emb: (..., Z, d)
+    request embeddings; w_px / w_py: (d, d) shared projections; edge_mask:
+    (..., Q) or (Q,) bool/float. Returns (..., Z, Q) float32 log-probs.
+    Differentiable wrt the embeddings and both projections (custom VJP).
+    """
+    batch_shape = c_emb.shape[:-2]
+    q, d = c_emb.shape[-2:]
+    z = h_emb.shape[-2]
+    c3 = c_emb.reshape((-1, q, d))
+    h3 = h_emb.reshape((-1, z, d))
+    maskf = jnp.broadcast_to(edge_mask, batch_shape + (q,))
+    maskf = maskf.reshape((-1, q)).astype(jnp.float32)
+    out = _policy_score(c3, h3, w_px, w_py, maskf,
+                        float(tanh_clip), int(bz), bool(interpret))
+    return out.reshape(batch_shape + (z, q))

@@ -77,3 +77,18 @@ def policy_score_ref(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip=10.0):
     imp = tanh_clip * jnp.tanh(u)
     imp = jnp.where(edge_mask[None, :], imp, -1e9)
     return jax.nn.log_softmax(imp, axis=-1)
+
+
+def policy_score_xla(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip=10.0):
+    """Batched plain-XLA policy head: the einsum formulation the network
+    used before the head was factored out, over any leading batch shape.
+
+    c_emb: (..., Q, d); h_emb: (..., Z, d); edge_mask: (..., Q) or (Q,).
+    Returns (..., Z, Q) log a_qz."""
+    d = c_emb.shape[-1]
+    px = c_emb @ w_px
+    py = h_emb @ w_py
+    u = jnp.einsum("...zd,...qd->...zq", py, px) / math.sqrt(d)
+    imp = tanh_clip * jnp.tanh(u)  # eq (16)
+    imp = jnp.where(edge_mask[..., None, :], imp, -1e9)
+    return jax.nn.log_softmax(imp, axis=-1)  # eq (17): softmax over edges

@@ -16,9 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.decode import greedy_decode, sampling_decode
 from repro.core.heuristics import solve_greedy, solve_local, solve_random
-from repro.core.policy import PolicyConfig, corais_apply
+from repro.core.inference import make_decision_fn
+from repro.core.policy import PolicyConfig
 from repro.core.state import QueuedRequest, snapshot_instance
 from repro.serving.topology import nearest_alive_edge
 
@@ -39,27 +39,20 @@ class CentralController:
 
     def __post_init__(self):
         self._key = jax.random.PRNGKey(self.seed)
-        self._forward = None
+        self._decide = None
         self.last_decision_time = 0.0
 
     def _policy_assign(self, inst) -> np.ndarray:
-        if self._forward is None:
-            cfg = self.policy_cfg
-
-            @jax.jit
-            def forward(jinst):
-                lp, _ = corais_apply(self.policy_params, self.policy_state,
-                                     jinst, cfg, training=False)
-                return lp
-
-            self._forward = forward
+        if self._decide is None:
+            # shared decision path (core.inference): compile once against
+            # the padded snapshot shape, reuse every round
+            mode = "sample" if self.scheduler == "corais-sample" else "greedy"
+            self._decide = make_decision_fn(
+                self.policy_params, self.policy_state, self.policy_cfg,
+                mode=mode, num_samples=self.sample_n)
         jinst = jax.tree.map(jnp.asarray, inst)
-        lp = self._forward(jinst)
-        if self.scheduler == "corais-sample":
-            self._key, sub = jax.random.split(self._key)
-            assign, _ = sampling_decode(sub, jinst, lp, self.sample_n)
-        else:
-            assign = greedy_decode(lp)
+        self._key, sub = jax.random.split(self._key)
+        assign = self._decide(jinst, sub)
         return np.asarray(jax.block_until_ready(assign))
 
     def schedule(self, edges, pending: Sequence[QueuedRequest], w: np.ndarray,

@@ -46,9 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.decode import greedy_decode, sampling_decode
+from repro.core.inference import make_policy_assign
 from repro.core.objective import makespan
-from repro.core.policy import PolicyConfig, corais_apply
 from repro.core.state import slot_workload_features
 from repro.serving import rounds
 
@@ -381,22 +380,38 @@ def greedy_assign(key, inst):
     return cur
 
 
-def make_policy_assign(params, policy_state, policy_cfg: PolicyConfig,
-                       mode: str = "greedy", num_samples: int = 64) -> AssignFn:
-    """The CoRaiS policy as an engine scheduler (greedy or best-of-n decode)."""
-
-    def fn(key, inst):
-        lp, _ = corais_apply(params, policy_state, inst, policy_cfg,
-                             training=False)
-        if mode == "greedy":
-            return greedy_decode(lp)
-        assign, _ = sampling_decode(key, inst, lp, num_samples)
-        return assign.astype(jnp.int32)
-
-    return fn
-
-
+#: Engine scheduling backends, selectable by name. Plain entries are
+#: AssignFns; entries tagged ``_assign_factory`` (the policy) are built
+#: with policy kwargs through :func:`resolve_assign_fn`.
 ASSIGN_FNS = {
     "local": local_assign,
     "greedy": greedy_assign,
+    "policy": make_policy_assign,
 }
+
+
+def resolve_assign_fn(name: str, **policy_kwargs) -> AssignFn:
+    """Look an engine backend up by name.
+
+    Heuristic backends resolve to their AssignFn directly; the ``"policy"``
+    entry is a factory and is built from ``policy_kwargs`` (``params``,
+    ``policy_state``, ``policy_cfg``, optional ``mode`` / ``num_samples`` /
+    ``backend`` — see :func:`repro.core.inference.make_policy_assign`)."""
+    try:
+        entry = ASSIGN_FNS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine backend {name!r}; registered: "
+            f"{', '.join(sorted(ASSIGN_FNS))}") from None
+    if getattr(entry, "_assign_factory", False):
+        if not policy_kwargs:
+            raise ValueError(
+                f"engine backend {name!r} is a policy factory; pass at "
+                f"least params=, policy_state= and policy_cfg= (see "
+                f"repro.core.inference.make_policy_assign)")
+        return entry(**policy_kwargs)
+    if policy_kwargs:
+        raise ValueError(
+            f"engine backend {name!r} is not a policy factory; it takes "
+            f"no kwargs (got {sorted(policy_kwargs)})")
+    return entry

@@ -1,0 +1,305 @@
+"""Unified policy inference stack: encode/score split, backend registry
+parity (xla / ref / pallas-interpret), custom-VJP gradients, mask
+invariance under padding, and the engine's named policy backend."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import InstanceConfig, generate_batch
+from repro.core.inference import make_decision_fn, policy_decide
+from repro.core.policy import (PolicyConfig, corais_apply, corais_encode,
+                               corais_init, corais_score,
+                               list_score_backends)
+from repro.serving import engine
+from repro.workloads import materialize_rounds, scenario
+
+CFG = PolicyConfig(d_model=32, ff_hidden=64, edge_layers=2, request_layers=1)
+BACKENDS = ("xla", "ref", "pallas")
+
+
+def _batch(seed=0, b=3, q=5, z=12, q_pad=None, z_pad=None):
+    rng = np.random.default_rng(seed)
+    batch = generate_batch(
+        rng,
+        InstanceConfig(num_edges=q, num_requests=z, max_edges=q_pad,
+                       max_requests=z_pad),
+        b)
+    return jax.tree.map(jnp.asarray, batch)
+
+
+# -- encode/score split ------------------------------------------------------
+
+
+def test_encode_score_composition_is_apply():
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch()
+    lp_apply, st_apply = corais_apply(params, state, batch, CFG, training=True)
+    c, h, st_split = corais_encode(params, state, batch, CFG, training=True)
+    lp_split = corais_score(params, c, h, batch["edge_mask"], CFG)
+    np.testing.assert_array_equal(np.asarray(lp_apply), np.asarray(lp_split))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), st_apply, st_split)
+
+
+def test_registry_lists_all_backends_and_rejects_unknown():
+    assert set(BACKENDS) <= set(list_score_backends())
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1)
+    c, h, _ = corais_encode(params, state, batch, CFG)
+    with pytest.raises(ValueError, match="unknown score backend"):
+        corais_score(params, c, h, batch["edge_mask"], CFG, backend="nope")
+
+
+# -- kernel parity (satellite: pallas-interpret vs ref vs xla <= 1e-5) -------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_score_backend_parity_with_xla_head(backend):
+    """Same encoder outputs through every head implementation: log-probs
+    agree to <= 1e-5, batched and unbatched, mask included."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(q=4, q_pad=6, z=9, z_pad=13)  # padded + odd Z
+    c, h, _ = corais_encode(params, state, batch, CFG)
+    lp_xla = corais_score(params, c, h, batch["edge_mask"], CFG, backend="xla")
+    lp = corais_score(params, c, h, batch["edge_mask"], CFG, backend=backend)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_xla),
+                               rtol=1e-5, atol=1e-5)
+    # unbatched single instance through the same entry (same embeddings,
+    # different backend — untrained batchnorm stats depend on batch width,
+    # so the xla reference is recomputed on the unbatched encoder outputs)
+    inst = jax.tree.map(lambda x: x[0], batch)
+    c1, h1, _ = corais_encode(params, state, inst, CFG)
+    lp1 = corais_score(params, c1, h1, inst["edge_mask"], CFG, backend=backend)
+    lp1_xla = corais_score(params, c1, h1, inst["edge_mask"], CFG,
+                           backend="xla")
+    np.testing.assert_allclose(np.asarray(lp1), np.asarray(lp1_xla),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_apply_backend_kwarg_end_to_end_parity():
+    params, state = corais_init(jax.random.PRNGKey(1), CFG)
+    batch = _batch(seed=5)
+    lps = {b: corais_apply(params, state, batch, CFG, backend=b)[0]
+           for b in BACKENDS}
+    for b in ("ref", "pallas"):
+        np.testing.assert_allclose(np.asarray(lps[b]), np.asarray(lps["xla"]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# -- custom VJP (satellite: finite-difference gradient check) ----------------
+
+
+def test_pallas_vjp_matches_finite_differences():
+    """Central finite differences on the fused kernel's scalar loss vs the
+    custom_vjp gradients, for every differentiable input."""
+    from repro.kernels import ops
+    q, z, d = 4, 7, 8
+    c = jax.random.normal(jax.random.PRNGKey(0), (q, d))
+    h = jax.random.normal(jax.random.PRNGKey(1), (z, d))
+    wx = jax.random.normal(jax.random.PRNGKey(2), (d, d)) * 0.2
+    wy = jax.random.normal(jax.random.PRNGKey(3), (d, d)) * 0.2
+    mask = jnp.asarray([True, True, True, False])
+    w = jax.random.normal(jax.random.PRNGKey(4), (z, q))
+
+    def loss(c, h, wx, wy):
+        lp = ops.policy_score(c, h, wx, wy, mask, bz=4)
+        return jnp.sum(jnp.exp(lp) * w)  # bounded in every direction
+
+    args = (c, h, wx, wy)
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3))(*args)
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for ai, g in enumerate(grads):
+        g = np.asarray(g)
+        for _ in range(5):  # spot-check coordinates
+            idx = tuple(rng.integers(0, s) for s in g.shape)
+            e = np.zeros(g.shape, np.float32)
+            e[idx] = eps
+            hi = list(args)
+            lo = list(args)
+            hi[ai] = args[ai] + e
+            lo[ai] = args[ai] - e
+            fd = (float(loss(*hi)) - float(loss(*lo))) / (2 * eps)
+            np.testing.assert_allclose(g[idx], fd, rtol=5e-2, atol=5e-3,
+                                       err_msg=f"arg {ai} coord {idx}")
+
+
+def test_pallas_grads_match_xla_backend_grads():
+    """grad through corais_score must agree across backends (REINFORCE
+    trains through whichever head is configured)."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=2, z=9)
+    c, h, _ = corais_encode(params, state, batch, CFG)
+    w = jax.random.normal(jax.random.PRNGKey(9), (2, 9, 5))
+
+    def loss(c, h, backend):
+        lp = corais_score(params, c, h, batch["edge_mask"], CFG,
+                          backend=backend)
+        return jnp.sum(jnp.exp(lp) * w)
+
+    for backend in ("ref", "pallas"):
+        gc, gh = jax.grad(lambda a, b: loss(a, b, backend), (0, 1))(c, h)
+        gc0, gh0 = jax.grad(lambda a, b: loss(a, b, "xla"), (0, 1))(c, h)
+        np.testing.assert_allclose(np.asarray(gc), np.asarray(gc0),
+                                   rtol=1e-4, atol=1e-5, err_msg=backend)
+        np.testing.assert_allclose(np.asarray(gh), np.asarray(gh0),
+                                   rtol=1e-4, atol=1e-5, err_msg=backend)
+
+
+def test_pallas_backend_under_vmap_and_grad():
+    """The fused kernel inside vmap (the engine's instance axis) and grad
+    through that vmap (temporal REINFORCE) both match the xla head."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=3)
+    w = jax.random.normal(jax.random.PRNGKey(7), (3, 12, 5))
+
+    def one(inst, backend):
+        c, h, _ = corais_encode(params, state, inst, CFG)
+        return corais_score(params, c, h, inst["edge_mask"], CFG,
+                            backend=backend)
+
+    lp_p = jax.vmap(lambda i: one(i, "pallas"))(batch)
+    lp_x = jax.vmap(lambda i: one(i, "xla"))(batch)
+    np.testing.assert_allclose(np.asarray(lp_p), np.asarray(lp_x),
+                               rtol=1e-5, atol=1e-5)
+
+    def loss(params, backend):
+        return jnp.sum(jnp.exp(jax.vmap(
+            lambda i: one_p(params, i, backend))(batch)) * w)
+
+    def one_p(params, inst, backend):
+        c, h, _ = corais_encode(params, state, inst, CFG)
+        return corais_score(params, c, h, inst["edge_mask"], CFG,
+                            backend=backend)
+
+    from jax.flatten_util import ravel_pytree
+    gp = jax.grad(loss)(params, "pallas")
+    gx = jax.grad(loss)(params, "xla")
+    flat_p, _ = ravel_pytree(gp)
+    flat_x, _ = ravel_pytree(gx)
+    np.testing.assert_allclose(np.asarray(flat_p), np.asarray(flat_x),
+                               rtol=1e-4, atol=1e-5)
+
+
+# -- mask invariance (satellite: padding must not leak) ----------------------
+
+
+def _pad_instance(inst, q_pad, z_pad):
+    """Re-pad a single instance to larger (Q, Z) with zero features."""
+    q = inst["edge_mask"].shape[-1]
+    z = inst["req_mask"].shape[-1]
+    dq, dz = q_pad - q, z_pad - z
+    out = dict(inst)
+    out["edge_coords"] = jnp.pad(inst["edge_coords"], ((0, dq), (0, 0)))
+    out["phi"] = jnp.pad(inst["phi"], ((0, dq), (0, 0)))
+    out["replicas"] = jnp.pad(inst["replicas"], (0, dq))
+    out["workload"] = jnp.pad(inst["workload"], ((0, dq), (0, 0)))
+    out["w"] = jnp.pad(inst["w"], ((0, dq), (0, dq)))
+    out["edge_mask"] = jnp.pad(inst["edge_mask"], (0, dq))
+    out["req_src"] = jnp.pad(inst["req_src"], (0, dz))
+    out["req_size"] = jnp.pad(inst["req_size"], (0, dz))
+    out["req_mask"] = jnp.pad(inst["req_mask"], (0, dz))
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mask_invariance_of_encode_and_score(backend):
+    """Padding extra edges/requests onto an instance must leave the valid
+    region of the embeddings and log-probs unchanged (catches -1e9 and
+    masked-norm leaks through softmax/batchnorm denominators)."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1, q=4, z=6)
+    inst = jax.tree.map(lambda x: x[0], batch)
+    padded = _pad_instance(inst, q_pad=7, z_pad=11)
+
+    c0, h0, _ = corais_encode(params, state, inst, CFG)
+    c1, h1, _ = corais_encode(params, state, padded, CFG)
+    np.testing.assert_allclose(np.asarray(c1)[:4], np.asarray(c0),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h1)[:6], np.asarray(h0),
+                               rtol=0, atol=1e-6)
+
+    lp0 = corais_score(params, c0, h0, inst["edge_mask"], CFG,
+                       backend=backend)
+    lp1 = corais_score(params, c1, h1, padded["edge_mask"], CFG,
+                       backend=backend)
+    np.testing.assert_allclose(np.asarray(lp1)[:6, :4], np.asarray(lp0),
+                               rtol=0, atol=1e-6)
+    # padded edges keep zero probability for real requests
+    probs = np.exp(np.asarray(lp1))
+    assert probs[:6, 4:].max() < 1e-6
+    # and the decision itself is identical
+    g0 = np.asarray(policy_decide(None, params, state, inst, CFG,
+                                  backend=backend))
+    g1 = np.asarray(policy_decide(None, params, state, padded, CFG,
+                                  backend=backend))
+    np.testing.assert_array_equal(g1[:6], g0)
+
+
+def test_mask_invariance_of_engine_assignments():
+    """Widening the engine's arrival padding (max_per_round) must not move
+    any real request's assignment, for the policy and greedy backends."""
+    pcfg = PolicyConfig(d_model=32, ff_hidden=64, edge_layers=1,
+                        request_layers=1)
+    params, pstate = corais_init(jax.random.PRNGKey(0), pcfg)
+    q, rounds, dt = 5, 6, 0.25
+    fns = {
+        "policy": engine.resolve_assign_fn(
+            "policy", params=params, policy_state=pstate, policy_cfg=pcfg),
+        "greedy": engine.resolve_assign_fn("greedy"),
+    }
+    for name, fn in fns.items():
+        outs = {}
+        for pad in (16, 32):
+            arr = materialize_rounds(scenario("uniform_iid"), q, rounds, dt,
+                                     seed=0, max_per_round=pad)
+            cfg = engine.EngineConfig(num_edges=q, num_rounds=rounds,
+                                      round_interval=dt, max_per_round=pad)
+            run = engine.make_rollout(cfg, fn)
+            final, infos = run(engine.init_state(cfg, 0), arr,
+                               jax.random.PRNGKey(1))
+            mask = np.asarray(arr["mask"])
+            outs[pad] = np.asarray(jax.device_get(infos["assign"]))[mask]
+        np.testing.assert_array_equal(outs[16], outs[32], err_msg=name)
+
+
+# -- engine + controller integration -----------------------------------------
+
+
+def test_policy_backend_rollout_matches_across_score_backends():
+    """Full batched rollouts driven by the policy must produce identical
+    assignments whichever scoring backend computes the head."""
+    pcfg = PolicyConfig(d_model=32, ff_hidden=64, edge_layers=1,
+                        request_layers=1)
+    params, pstate = corais_init(jax.random.PRNGKey(0), pcfg)
+    q, rounds, dt = 4, 4, 0.25
+    arr = materialize_rounds(scenario("uniform_iid"), q, rounds, dt, seed=2)
+    cfg = engine.EngineConfig(num_edges=q, num_rounds=rounds,
+                              round_interval=dt,
+                              max_per_round=arr["mask"].shape[-1])
+    finals = {}
+    for backend in BACKENDS:
+        fn = engine.resolve_assign_fn(
+            "policy", params=params, policy_state=pstate, policy_cfg=pcfg,
+            backend=backend)
+        run = engine.make_rollout(cfg, fn)
+        final, infos = run(engine.init_state(cfg, 2), arr,
+                           jax.random.PRNGKey(0))
+        finals[backend] = jax.device_get(infos["assign"])
+    for backend in ("ref", "pallas"):
+        np.testing.assert_array_equal(finals[backend], finals["xla"],
+                                      err_msg=backend)
+
+
+def test_make_decision_fn_modes():
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1)
+    inst = jax.tree.map(lambda x: x[0], batch)
+    for mode in ("greedy", "sample"):
+        decide = make_decision_fn(params, state, CFG, mode=mode,
+                                  num_samples=8)
+        a = np.asarray(decide(inst, jax.random.PRNGKey(0)))
+        assert a.shape == (12,) and a.dtype == np.int32 and a.max() < 5
+    with pytest.raises(ValueError, match="decode mode"):
+        policy_decide(None, params, state, inst, CFG, mode="beam")
