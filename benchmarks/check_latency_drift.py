@@ -1,0 +1,120 @@
+"""Guard the paper's real-time claim in CI: p95 decision-latency drift.
+
+Compares the per-(backend, Q, Z) single-decision p95 from a fresh
+``policy_latency.py`` report against the committed baseline
+(``benchmarks/policy_latency_baseline.json``) and exits non-zero when any
+cell regressed beyond ``--factor`` (default 4x, with a ``--floor-ms``
+absolute floor so microsecond-level cells don't trip on scheduler noise).
+The generous factor absorbs machine-to-machine variance — the check is a
+drift tripwire for order-of-magnitude regressions (an accidentally
+un-jitted path, a fused kernel falling back to per-request Python), not a
+microbenchmark.
+
+Run:  PYTHONPATH=src python benchmarks/policy_latency.py --smoke
+      PYTHONPATH=src python benchmarks/check_latency_drift.py
+
+Refresh the committed baseline after an intentional perf change:
+
+      PYTHONPATH=src python benchmarks/check_latency_drift.py \\
+          --write-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_SCHEMA = "corais.policy_latency_baseline.v1"
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_REPORT = os.path.join(HERE, "..", "results", "policy_latency.json")
+DEFAULT_BASELINE = os.path.join(HERE, "policy_latency_baseline.json")
+
+
+def _cell_key(cell: dict) -> tuple:
+    return (cell["backend"], int(cell["num_edges"]),
+            int(cell["num_requests"]))
+
+
+def load_report_cells(path: str) -> dict:
+    """{(backend, Q, Z): p95_ms} from a corais.policy_latency.v1 report."""
+    with open(path) as f:
+        report = json.load(f)
+    return {_cell_key(c): float(c["single"]["p95_ms"])
+            for c in report["cells"]}
+
+
+def write_baseline(report_path: str, baseline_path: str) -> None:
+    cells = load_report_cells(report_path)
+    payload = {
+        "schema": BASELINE_SCHEMA,
+        "source_report": os.path.basename(report_path),
+        "cells": [{"backend": b, "num_edges": q, "num_requests": z,
+                   "p95_ms": p95}
+                  for (b, q, z), p95 in sorted(cells.items())],
+    }
+    with open(baseline_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"baseline written to {os.path.abspath(baseline_path)} "
+          f"({len(cells)} cells)")
+
+
+def check(report_path: str, baseline_path: str, *, factor: float,
+          floor_ms: float) -> int:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    if baseline.get("schema") != BASELINE_SCHEMA:
+        print(f"error: {baseline_path} is not a {BASELINE_SCHEMA} file")
+        return 2
+    base = {_cell_key(c): float(c["p95_ms"]) for c in baseline["cells"]}
+    current = load_report_cells(report_path)
+    common = sorted(set(base) & set(current))
+    if not common:
+        print("error: no overlapping (backend, Q, Z) cells between report "
+              "and baseline — regenerate one of them")
+        return 2
+
+    failures = []
+    for key in common:
+        limit = max(floor_ms, factor * base[key])
+        status = "ok" if current[key] <= limit else "DRIFT"
+        if status == "DRIFT":
+            failures.append(key)
+        b, q, z = key
+        print(f"  {b:7s} Q={q:4d} Z={z:5d} p95={current[key]:8.3f}ms "
+              f"baseline={base[key]:8.3f}ms limit={limit:8.3f}ms {status}")
+    skipped = sorted(set(current) - set(base))
+    for b, q, z in skipped:
+        print(f"  {b:7s} Q={q:4d} Z={z:5d} (no baseline cell, skipped)")
+    if failures:
+        print(f"FAIL: {len(failures)}/{len(common)} cells regressed beyond "
+              f"{factor:.1f}x baseline (floor {floor_ms:.1f}ms)")
+        return 1
+    print(f"OK: {len(common)} cells within {factor:.1f}x of baseline")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default=DEFAULT_REPORT,
+                    help="fresh policy_latency.py report to check")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline JSON")
+    ap.add_argument("--factor", type=float, default=4.0,
+                    help="allowed p95 multiple over baseline")
+    ap.add_argument("--floor-ms", type=float, default=1.0,
+                    help="cells under this absolute p95 never fail")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="distill --report into --baseline and exit")
+    args = ap.parse_args()
+
+    if args.write_baseline:
+        write_baseline(args.report, args.baseline)
+        return
+    sys.exit(check(args.report, args.baseline, factor=args.factor,
+                   floor_ms=args.floor_ms))
+
+
+if __name__ == "__main__":
+    main()

@@ -115,6 +115,82 @@ def get_temporal_policy(en: int = 5, batches: int = 200,
     return params, state, cfg
 
 
+def get_resilient_policy(en: int = 5, batches: int = 300,
+                         d_model: int = POLICY_DIM,
+                         scenario_name: str = "chaos-rolling-failure",
+                         slo: float = 3.0, slo_penalty: float = 10.0,
+                         verbose: bool = True):
+    """Train (or load cached) the admission head of a CoRaiS policy on
+    fault-injected rollouts of a chaos scenario — the policy-with-admission
+    column of the resilience fault matrix.
+
+    The dispatch weights warm-start from the static-trained policy
+    (:func:`get_trained_policy`) and stay frozen
+    (``TemporalRLConfig(freeze_dispatch=True)``): container-scale
+    episode-REINFORCE at batch 8 is noisy enough to destroy a good
+    dispatch policy, and the fault matrix should measure what admission
+    *adds* on identical dispatch, not dispatch-training budget. Only the
+    admit head (fresh, near-admit-all bias) trains, against episode cost
+    ``mean_response + slo_penalty * slo_violation_frac`` where sheds and
+    drops count as violations — shed-everything costs ``slo_penalty``
+    flat and loses to serving what fits."""
+    from repro.core.policy import corais_init
+    from repro.core.train import TemporalRLConfig, temporal_train
+    from repro.serving.engine import EngineConfig
+
+    # admit_bias 1.0 (not the registry default 2.0): the episode-level
+    # REINFORCE signal moves logits slowly, and eval thresholds at 0 —
+    # starting closer to the boundary lets thresholded shedding emerge
+    # within a container-scale budget. lr is high because only the small
+    # admit head trains.
+    cfg = TemporalRLConfig(
+        policy=PolicyConfig(d_model=d_model, admit_head=True,
+                            admit_bias=1.0),
+        # overload scenarios outrun the default 16-wide admission queue
+        engine=EngineConfig(num_edges=en, max_per_round=64),
+        scenario=scenario_name,
+        batch_size=8,
+        lr=1e-3,
+        num_batches=batches,
+        seed=0,
+        admission=True,
+        slo=slo,
+        slo_penalty=slo_penalty,
+        freeze_dispatch=True,
+    )
+    tag = (f"policy_resilient_admit_en{en}_d{d_model}_b{batches}_"
+           f"{scenario_name}")
+    ckpt = Checkpointer(os.path.join(RESULTS, tag), every=10**9,
+                        async_save=False)
+    template = jax.eval_shape(
+        lambda: corais_init(jax.random.PRNGKey(cfg.seed), cfg.policy))
+    restored = ckpt.restore_latest({"params": template[0],
+                                    "state": template[1]})
+    if restored is not None:
+        if verbose:
+            print(f"# loaded cached resilient policy {tag}")
+        return restored["tree"]["params"], restored["tree"]["state"], cfg
+
+    sparams, sstate, _ = get_trained_policy(en, 50, 800, d_model=d_model,
+                                            verbose=verbose)
+    params, state = corais_init(jax.random.PRNGKey(cfg.seed), cfg.policy)
+    params = dict(sparams, admit=params["admit"])
+    state = sstate
+
+    t0 = time.time()
+    cb = (lambda m: print(f"#   batch {m['batch']} cost {m['cost_mean']:.3f} "
+                          f"shed {m['shed']:.1f}")) if verbose else None
+    params, state, _, hist = temporal_train(cfg, params=params, state=state,
+                                            callback=cb)
+    if verbose:
+        print(f"# resilient-trained (admit head) {batches} batches in "
+              f"{time.time()-t0:.0f}s "
+              f"(cost {hist[0]['cost_mean']:.3f} -> {hist[-1]['cost_mean']:.3f})")
+    ckpt.save(batches, {"params": params, "state": state})
+    ckpt.wait()
+    return params, state, cfg
+
+
 def eval_instances(en: int, rn: int, n: int, seed: int = 999):
     rng = np.random.default_rng(seed)
     from repro.core import generate_instance

@@ -25,42 +25,58 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.decode import greedy_decode, sampling_decode
-from repro.core.policy import PolicyConfig, corais_apply
+from repro.core.policy import (PolicyConfig, corais_admit, corais_encode,
+                               corais_score)
 
 DECODE_MODES = ("greedy", "sample")
 
 
 def policy_decide(key, params, policy_state, inst, cfg: PolicyConfig, *,
                   mode: str = "greedy", num_samples: int = 64,
-                  backend: Optional[str] = None) -> jax.Array:
+                  backend: Optional[str] = None,
+                  admission: bool = False):
     """One full scheduling decision on a frozen instance: (Z,) int32
     execution edge per request. ``mode="greedy"`` ignores ``key``;
     ``mode="sample"`` draws ``num_samples`` complete decisions and keeps
-    the cheapest (eq 19), greedy included as a candidate."""
+    the cheapest (eq 19), greedy included as a candidate.
+
+    With ``admission=True`` (requires a policy built with
+    ``admit_head=True``) the same encoder pass also thresholds the
+    admission head, and the decision is an ``(assign, admit)`` pair —
+    the engine's extended AssignFn contract."""
     if mode not in DECODE_MODES:
         raise ValueError(f"unknown decode mode {mode!r}; "
                          f"supported: {', '.join(DECODE_MODES)}")
-    log_probs, _ = corais_apply(params, policy_state, inst, cfg,
-                                training=False, backend=backend)
+    c_emb, h_emb, _ = corais_encode(params, policy_state, inst, cfg,
+                                    training=False)
+    log_probs = corais_score(params, c_emb, h_emb, inst["edge_mask"], cfg,
+                             backend=backend)
     if mode == "greedy":
-        return greedy_decode(log_probs)
-    assign, _ = sampling_decode(key, inst, log_probs, num_samples)
-    return assign.astype(jnp.int32)
+        assign = greedy_decode(log_probs)
+    else:
+        assign, _ = sampling_decode(key, inst, log_probs, num_samples)
+        assign = assign.astype(jnp.int32)
+    if not admission:
+        return assign
+    admit = corais_admit(params, c_emb, h_emb, inst["edge_mask"], cfg) > 0
+    return assign, admit & inst["req_mask"]
 
 
 def make_policy_assign(params, policy_state, policy_cfg: PolicyConfig,
                        mode: str = "greedy", num_samples: int = 64,
-                       backend: Optional[str] = None):
+                       backend: Optional[str] = None,
+                       admission: bool = False):
     """The CoRaiS policy as an engine scheduler: AssignFn(key, inst).
 
     The closure stays un-jitted so the engine can trace it inside its own
     jitted/vmapped rollout; the whole rollout then compiles end-to-end over
-    the instance axis, fused scoring kernel included."""
+    the instance axis, fused scoring kernel included. ``admission=True``
+    returns (assign, admit) pairs — see :func:`policy_decide`."""
 
     def fn(key, inst):
         return policy_decide(key, params, policy_state, inst, policy_cfg,
                              mode=mode, num_samples=num_samples,
-                             backend=backend)
+                             backend=backend, admission=admission)
 
     return fn
 

@@ -61,6 +61,13 @@ class PolicyConfig:
     req_align: str = "mha"      # "mha" (CoRaiS) | "mlp" (FC2/FC3)
     feature_scale: float = 0.1  # static input scaling for workload features
     score_backend: str = "xla"  # eq 16-17 head: "xla" | "ref" | "pallas"
+    # Admission head (resilience subsystem): a per-request admit logit on
+    # top of the shared encoders, trained jointly with dispatch on
+    # fault-injected episodes. Off by default so fault-free checkpoints
+    # keep their parameter count.
+    admit_head: bool = False
+    admit_hidden: int = 64
+    admit_bias: float = 2.0     # initial logit offset: start near admit-all
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +159,14 @@ def corais_init(key, cfg: PolicyConfig):
         "w_px": uniform_init(keys[5], (d, d), fan_in=d),
         "w_py": uniform_init(keys[6], (d, d), fan_in=d),
     }
+    if cfg.admit_head:
+        ka1, ka2 = jax.random.split(keys[7])
+        params["admit"] = {
+            # per-request MLP on [h_z ; f_hat]: the request embedding plus
+            # the system context it would be admitted into
+            "l1": linear_init(ka1, 2 * d, cfg.admit_hidden),
+            "l2": linear_init(ka2, cfg.admit_hidden, 1),
+        }
     state = {"edge_layers": edge_states, "req_layers": req_states}
     return params, state
 
@@ -315,6 +330,25 @@ def corais_score(params, c_emb, h_emb, edge_mask, cfg: PolicyConfig, *,
             f"{', '.join(list_score_backends())}") from None
     return fn(c_emb, h_emb, params["w_px"], params["w_py"], edge_mask,
               cfg.tanh_clip)
+
+
+def corais_admit(params, c_emb, h_emb, edge_mask, cfg: PolicyConfig):
+    """Admission-head logits on encoder outputs: (..., Z) per-request
+    admit/shed scores (sigmoid -> admit probability; > 0 -> admit under
+    greedy decoding). Shares the dispatch encoders — the head sees each
+    request embedding next to the pooled cluster context, so "is there
+    anywhere this request can still meet its SLO" is one linear readout
+    away. ``cfg.admit_bias`` offsets the logits so a fresh head starts
+    near admit-all and training has to learn to shed."""
+    if "admit" not in params:
+        raise ValueError(
+            "policy has no admission head; init with "
+            "PolicyConfig(admit_head=True)")
+    f_hat = _masked_max(c_emb, edge_mask)  # (..., d) cluster context
+    x = jnp.concatenate(
+        [h_emb, jnp.broadcast_to(f_hat[..., None, :], h_emb.shape)], axis=-1)
+    hid = jax.nn.relu(linear_apply(params["admit"]["l1"], x))
+    return linear_apply(params["admit"]["l2"], hid)[..., 0] + cfg.admit_bias
 
 
 def corais_apply(params, state, inst, cfg: PolicyConfig, *,

@@ -23,12 +23,15 @@ import numpy as np
 from repro.core import instances as inst_lib
 from repro.core.decode import assignment_log_prob, greedy_decode
 from repro.core.objective import makespan
-from repro.core.policy import (PolicyConfig, corais_encode, corais_init,
-                               corais_score)
+from repro.core.policy import (PolicyConfig, corais_admit, corais_encode,
+                               corais_init, corais_score)
 from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
+from repro.resilience import faults as faults_lib
+from repro.resilience.policies import nearest_alive
 from repro.serving import engine as engine_lib
 from repro.serving.engine import EngineConfig
 from repro.workloads import materialize_round_batch, scenario
+from repro.workloads.scenarios import scenario_fault_spec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +194,22 @@ class TemporalRLConfig:
     num_batches: int = 1000
     seed: int = 0
     log_every: int = 10
+    # Resilience training (the chaos-scenario path). Episodes are fault-
+    # injected from the scenario's registered FaultSpec (or ``fault_spec``
+    # here, which wins); ``admission=True`` samples the policy's admit head
+    # per request and trains it jointly with dispatch. With ``slo > 0`` the
+    # episode cost adds ``slo_penalty * slo_violation_frac``, where sheds,
+    # drops, and stranded requests all count as violations — shedding
+    # everything is never a winning strategy.
+    fault_spec: Optional[faults_lib.FaultSpec] = None
+    admission: bool = False
+    slo: float = 0.0
+    slo_penalty: float = 0.0
+    # Train only the admission head, freezing every other parameter (the
+    # warm-started dispatch weights): episode-level REINFORCE at small
+    # batch sizes is noisy enough to destroy a good dispatch policy, and
+    # the admission decision is learnable on its own on top of it.
+    freeze_dispatch: bool = False
 
 
 def temporal_rl_loss(params, policy_state, sim_state, arrivals, sample_key,
@@ -201,17 +220,36 @@ def temporal_rl_loss(params, policy_state, sim_state, arrivals, sample_key,
     return is the mean response time over completed requests, with the
     batch-mean baseline. Returns (loss, aux)."""
     ecfg = cfg.engine
+    fault_mode = "alive" in arrivals
     adv_fn = jax.vmap(
         lambda st: engine_lib.advance(st, st["t"] + ecfg.round_interval, ecfg))
     inst_fn = jax.vmap(lambda st, a: engine_lib.round_instance(st, a, ecfg))
-    commit_fn = jax.vmap(lambda st, a, x: engine_lib.commit(st, a, x, ecfg))
+    commit_fn = jax.vmap(
+        lambda st, a, x, adm, ro: engine_lib.commit(st, a, x, ecfg, admit=adm,
+                                                    ready_offset=ro))
+    fault_fn = jax.vmap(lambda st, a: engine_lib.apply_faults(st, a, ecfg))
+    remap_fn = jax.vmap(
+        lambda st, s: nearest_alive(st["w"], st["alive"] > 0, s))
     drain_fn = jax.vmap(
         lambda st: engine_lib.advance(st, engine_lib.DRAIN_HORIZON, ecfg))
 
     def body(carry, arr):
         sim, key = carry
-        key, sub = jax.random.split(key)
+        key, sub, sub_adm = jax.random.split(key, 3)
         sim = adv_fn(sim)
+        ready_offset = jnp.zeros_like(arr["size"])
+        if fault_mode:
+            # the engine's two-step admission failover (see step_round):
+            # arrivals re-admitted by the second step sort after native ones
+            arr = dict(arr)
+            arr["src"] = remap_fn(
+                sim, jnp.clip(arr["src"].astype(jnp.int32), 0,
+                              ecfg.num_edges - 1))
+            sim = fault_fn(sim, arr)
+            readmitted = ~jnp.take_along_axis(
+                sim["alive"] > 0, arr["src"], axis=-1)
+            ready_offset = engine_lib.RETRY_EPS * readmitted
+            arr["src"] = remap_fn(sim, arr["src"])
         inst = inst_fn(sim, arr)
         # eval-mode norm statistics: rounds of one rollout are far from
         # i.i.d., so running batchnorm stats are not updated here.
@@ -221,10 +259,26 @@ def temporal_rl_loss(params, policy_state, sim_state, arrivals, sample_key,
                                  cfg.policy)  # (B, A, Q)
         act = jax.random.categorical(
             sub, jax.lax.stop_gradient(log_probs), axis=-1).astype(jnp.int32)
-        logp = assignment_log_prob(log_probs, act, inst["req_mask"])  # (B,)
+        rmask = inst["req_mask"]
         probs = jnp.exp(log_probs)
-        ent = jnp.sum(-jnp.sum(probs * log_probs, -1) * inst["req_mask"], -1)
-        sim = commit_fn(sim, arr, act)
+        ent = jnp.sum(-jnp.sum(probs * log_probs, -1) * rmask, -1)
+        if cfg.admission:
+            logits = corais_admit(params, c_emb, h_emb, inst["edge_mask"],
+                                  cfg.policy)  # (B, A)
+            admit = jax.random.bernoulli(
+                sub_adm, jax.nn.sigmoid(jax.lax.stop_gradient(logits)))
+            logp_admit = jnp.sum(
+                jnp.where(rmask,
+                          jnp.where(admit, jax.nn.log_sigmoid(logits),
+                                    jax.nn.log_sigmoid(-logits)), 0.0), -1)
+            # a shed request's dispatch never executes: drop it from the
+            # dispatch log-prob to cut gradient variance (still unbiased)
+            logp = (assignment_log_prob(log_probs, act, rmask & admit)
+                    + logp_admit)
+        else:
+            admit = jnp.ones_like(rmask)
+            logp = assignment_log_prob(log_probs, act, rmask)  # (B,)
+        sim = commit_fn(sim, arr, act, admit, ready_offset)
         return (sim, key), (logp, ent)
 
     arr_rb = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), arrivals)
@@ -233,20 +287,34 @@ def temporal_rl_loss(params, policy_state, sim_state, arrivals, sample_key,
     sim = drain_fn(sim)
 
     committed = sim["slot_edge"] >= 0                       # (B, Z)
-    resp = jnp.where(committed, sim["slot_finish"] - sim["slot_submit"], 0.0)
-    n_done = jnp.maximum(jnp.sum(committed, -1), 1)
+    # a fault trajectory can strand slots on a dead-at-horizon edge with
+    # finish == INF; mean response is over realized completions only
+    done = committed & (sim["slot_finish"] < engine_lib.INF / 2)
+    resp = jnp.where(done, sim["slot_finish"] - sim["slot_submit"], 0.0)
+    n_done = jnp.maximum(jnp.sum(done, -1), 1)
     cost = jnp.sum(resp, -1) / n_done                       # (B,) mean response
+    aux = {}
+    if cfg.slo > 0:
+        violations = (jnp.sum(done & (resp > cfg.slo), -1)
+                      + jnp.sum(committed & ~done, -1)
+                      + sim["shed"] + sim["dropped"])
+        total = jnp.maximum(
+            jnp.sum(committed, -1) + sim["shed"] + sim["dropped"], 1)
+        viol_frac = violations.astype(jnp.float32) / total
+        cost = cost + cfg.slo_penalty * viol_frac
+        aux["slo_violation_frac"] = jnp.mean(viol_frac)
     adv = cost - jnp.mean(cost)
 
     reinforce = jnp.sum(logps, axis=0) * jax.lax.stop_gradient(adv)  # (B,)
     entropy = jnp.mean(jnp.sum(ents, axis=0))
     loss = jnp.mean(cfg.c1 * reinforce) - cfg.c2 * entropy
-    aux = {
+    aux.update({
         "cost_mean": jnp.mean(cost),
         "cost_best": jnp.min(cost),
         "entropy": entropy,
-        "completed": jnp.mean(jnp.sum(committed, -1).astype(jnp.float32)),
-    }
+        "completed": jnp.mean(jnp.sum(done, -1).astype(jnp.float32)),
+        "shed": jnp.mean(sim["shed"].astype(jnp.float32)),
+    })
     return loss, aux
 
 
@@ -260,6 +328,15 @@ def make_temporal_train_step(cfg: TemporalRLConfig,
                                                 has_aux=True)(
             params, policy_state, sim_state, arrivals, key, cfg
         )
+        if cfg.freeze_dispatch:
+            if cfg.admission and "admit" in grads:
+                grads = {k: (g if k == "admit"
+                             else jax.tree.map(jnp.zeros_like, g))
+                         for k, g in grads.items()}
+            else:
+                raise ValueError(
+                    "freeze_dispatch requires admission=True and a policy "
+                    "with admit_head=True (nothing would train otherwise)")
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
         params, opt_state = adam_update(params, grads, opt_state, adam_cfg)
         metrics = {"loss": loss, "grad_norm": gnorm, **aux}
@@ -285,6 +362,11 @@ def temporal_train(
     num_batches = num_batches if num_batches is not None else cfg.num_batches
     ecfg = cfg.engine
     wl = scenario(cfg.scenario)
+    fspec = cfg.fault_spec
+    if fspec is None:
+        fspec = scenario_fault_spec(cfg.scenario)
+    if fspec is not None and not fspec.has_faults:
+        fspec = None
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     if params is None:
@@ -305,6 +387,10 @@ def temporal_train(
             wl, ecfg.num_edges, ecfg.num_rounds, ecfg.round_interval,
             cfg.batch_size, base_seed=int(rng.integers(0, 2**31 - 1)),
             max_per_round=ecfg.max_per_round, overflow="clip")
+        if fspec is not None:
+            arrivals = faults_lib.attach_fault_batch(
+                arrivals, fspec, ecfg.num_edges,
+                seeds=rng.integers(0, 2**31 - 1, size=cfg.batch_size))
         key, sub = jax.random.split(key)
         t0 = time.perf_counter()
         params, opt_state, metrics = step_fn(

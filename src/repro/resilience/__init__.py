@@ -1,0 +1,17 @@
+"""Resilience subsystem: fault injection, admission control, circuit
+breaking, and retry for the multi-edge engines.
+
+``policies`` is leaf-level (pure jnp, imported by the batched engine);
+``faults`` sits above the serving layer and is imported lazily by callers
+(``from repro.resilience import faults``) so the package init itself stays
+out of the engine's import path.
+"""
+from repro.resilience.policies import (ResilienceConfig, admission_mask,
+                                       breaker_step, dispatch_mask,
+                                       est_response, nearest_alive,
+                                       probe_cap)
+
+__all__ = [
+    "ResilienceConfig", "admission_mask", "breaker_step", "dispatch_mask",
+    "est_response", "nearest_alive", "probe_cap",
+]

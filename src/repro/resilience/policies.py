@@ -1,0 +1,146 @@
+"""Resilience mechanisms as pure array ops on engine state.
+
+Three mechanisms, all jit/vmap-safe and all driven from
+``serving/engine.py::step_round`` when an :class:`ResilienceConfig` is set
+on the engine config:
+
+* **Admission control** — per-request admit/shed at dispatch time.
+  Heuristic baselines live here (``slo_threshold`` sheds requests whose
+  estimated response exceeds a bound; ``queue_depth`` sheds when the target
+  edge's backlog is too deep); the *trained* admission head
+  (``admission="policy"``) is produced by the policy itself — see
+  ``core/policy.py::corais_admit`` — and arrives at the engine as the
+  second element of the assign-fn's return value.
+* **Circuit breaking** — an edge that dies trips a breaker with an
+  exponentially growing cooldown; while open the edge is masked out of the
+  dispatch instance entirely, and when the cooldown lapses the breaker is
+  *half-open*: at most ``breaker_probe`` requests per round may probe it
+  until it has stayed healthy for ``breaker_reset_rounds`` rounds.
+* **Retry with backoff** — requests orphaned by an edge failure are
+  re-admitted at the nearest alive edge (the oracle's failover rule,
+  :func:`repro.serving.topology.nearest_alive_edge`, as an argmin); with
+  ``retry_backoff_rounds > 0`` each successive retry of the same request
+  additionally waits an exponentially growing number of rounds.
+
+This module deliberately imports nothing from ``repro.serving`` — the
+engine imports it, and keeping it leaf-level keeps the package import
+graph acyclic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Resilience mechanisms toggled on an ``EngineConfig``.
+
+    ``admission`` selects the shed rule: ``"none"`` (admit everything),
+    ``"slo_threshold"`` / ``"queue_depth"`` (heuristics below), or
+    ``"policy"`` (the assign fn supplies an admit mask; the engine falls
+    back to admit-all if it returns only assignments). ``slo`` is the
+    response-time objective used for violation metrics and the
+    slo_threshold heuristic's default bound."""
+
+    admission: str = "none"
+    admit_threshold: float = 0.0   # slo_threshold bound; 0 -> use ``slo``
+    queue_depth: float = 2.0       # max per-replica backlog (phi-seconds)
+    slo: float = 3.0               # response-time SLO (seconds)
+    retry_backoff_rounds: float = 0.0
+    retry_backoff_cap: int = 6
+    breaker: bool = False
+    breaker_cooldown_rounds: float = 2.0
+    breaker_backoff_cap: int = 4
+    breaker_reset_rounds: int = 4
+    breaker_probe: int = 1
+
+    def __post_init__(self):
+        if self.admission not in ("none", "slo_threshold", "queue_depth",
+                                  "policy"):
+            raise ValueError(f"unknown admission rule {self.admission!r}")
+
+
+def nearest_alive(w, alive, idx):
+    """Failover target per index: the nearest alive edge by distance row
+    ``w[idx]`` (itself when alive — w's diagonal is zero). Array twin of
+    ``repro.serving.topology.nearest_alive_edge``: both resolve distance
+    ties to the lowest edge index. ``alive`` must have at least one edge up
+    (FaultSpec.min_alive guarantees it for materialized trajectories)."""
+    d = jnp.where(alive[None, :], w[idx], jnp.inf)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def est_response(inst, assign):
+    """Cheap response-time estimate for dispatching each pending request to
+    its assigned edge, from the information a real CC has: eq (2) transfer
+    delay, the target's per-replica backlog (c_le + c_in workload features),
+    and the phi-estimate execution time."""
+    assign = assign.astype(jnp.int32)
+    src = inst["req_src"].astype(jnp.int32)
+    size = inst["req_size"]
+    transfer = jnp.where(assign == src, 0.0,
+                         inst["ct"] * size * inst["w"][src, assign])
+    backlog = (inst["workload"][..., 0] + inst["workload"][..., 1])[assign]
+    exec_t = inst["phi"][assign, 0] * size + inst["phi"][assign, 1]
+    return transfer + backlog + exec_t
+
+
+def admission_mask(res: ResilienceConfig, inst, assign):
+    """Heuristic admit mask (A,) bool for this round's pending requests.
+    ``"policy"`` admission is decided by the policy head, not here."""
+    if res.admission in ("none", "policy"):
+        return jnp.ones_like(inst["req_mask"])
+    if res.admission == "slo_threshold":
+        bound = res.admit_threshold if res.admit_threshold > 0 else res.slo
+        return est_response(inst, assign) <= bound
+    # queue_depth: shed when the target's backlog is already too deep
+    backlog = (inst["workload"][..., 0] + inst["workload"][..., 1])
+    return backlog[assign.astype(jnp.int32)] <= res.queue_depth
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+
+def breaker_step(open_until, trips, healthy, died, alive, t, dt,
+                 res: ResilienceConfig):
+    """One round of breaker bookkeeping at fault-application time ``t``.
+
+    A death trips the breaker with cooldown ``cooldown * 2^(trips-1)``
+    rounds (capped); an edge that is alive with a lapsed cooldown counts a
+    healthy round, and ``breaker_reset_rounds`` consecutive healthy rounds
+    reset its trip counter (half-open -> closed)."""
+    trips = trips + died.astype(jnp.float32)
+    backoff = jnp.exp2(jnp.clip(trips - 1.0, 0.0,
+                                float(res.breaker_backoff_cap)))
+    cooldown = res.breaker_cooldown_rounds * dt * backoff
+    open_until = jnp.where(died, t + cooldown, open_until)
+    healthy = jnp.where(alive & (t >= open_until), healthy + 1.0, 0.0)
+    trips = jnp.where(healthy >= res.breaker_reset_rounds, 0.0, trips)
+    return open_until, trips, healthy
+
+
+def dispatch_mask(alive, open_until, t):
+    """Edges eligible for dispatch: alive with no open breaker. Falls back
+    to plain liveness if every alive edge is behind an open breaker (the
+    system must keep serving)."""
+    m = alive & (t >= open_until)
+    return jnp.where(jnp.any(m), m, alive)
+
+
+def probe_cap(w, assign, req_mask, src, half_open, closed,
+              res: ResilienceConfig):
+    """Cap dispatches to half-open edges at ``breaker_probe`` per round:
+    excess requests fail over to the nearest fully-closed edge (in slot
+    order, so the first arrivals get the probes). No-op when no closed
+    edge exists."""
+    assign = assign.astype(jnp.int32)
+    num_edges = w.shape[-1]
+    onehot = ((assign[:, None] == jnp.arange(num_edges)[None, :])
+              & req_mask[:, None])
+    nth = jnp.take_along_axis(jnp.cumsum(onehot, axis=0),
+                              assign[:, None], axis=1)[:, 0]
+    over = half_open[assign] & (nth > res.breaker_probe) & req_mask
+    fallback = nearest_alive(w, closed, src.astype(jnp.int32))
+    return jnp.where(over & jnp.any(closed), fallback, assign)

@@ -30,6 +30,11 @@ class SimEdge:
     speed_factor: float = 1.0     # >1 = straggler (slowed edge)
     alive: bool = True
     phi_oracle: bool = False      # pin the estimator to the true coefficients
+    # Optional injected jitter, keyed by rid (rid -> multiplier). Set by
+    # resilience.faults.schedule_into_sim so both engines realize the same
+    # per-request noise (a retried request keeps its jitter); replaces the
+    # edge-local gaussian noise draw when present.
+    jitter_fn: Optional[object] = None
 
     def __post_init__(self):
         phi = (PhiEstimator(a=self.true_a, b=self.true_b, frozen=True)
@@ -47,8 +52,11 @@ class SimEdge:
 
     # -- execution -----------------------------------------------------
 
-    def true_runtime(self, size: float) -> float:
-        jitter = 1.0 + self.noise * float(self.rng.standard_normal())
+    def true_runtime(self, size: float, rid: Optional[int] = None) -> float:
+        if self.jitter_fn is not None and rid is not None:
+            jitter = float(self.jitter_fn(rid))
+        else:
+            jitter = 1.0 + self.noise * float(self.rng.standard_normal())
         return float(service_runtime(self.true_a, self.true_b, size,
                                      speed=self.speed_factor, jitter=jitter))
 
@@ -61,7 +69,7 @@ class SimEdge:
         while self.state.q_le and min(self._lanes) <= now + 1e-12 and self.alive:
             lane = int(np.argmin(self._lanes))
             req = self.state.q_le.pop(0)
-            rt = self.true_runtime(req.data_size)
+            rt = self.true_runtime(req.data_size, rid=req.rid)
             start = max(now, self._lanes[lane])
             self._lanes[lane] = start + rt
             req.start_time = start
@@ -81,6 +89,9 @@ class SimEdge:
         self.alive = False
         orphans = (list(self.state.q_le) + list(self.state.q_in)
                    + list(self.state.q_r) + list(self.inflight.values()))
+        # canonical re-admission order (global arrival order), so failover
+        # tie-breaks match the batched engine's slot order
+        orphans.sort(key=lambda r: r.rid)
         self.state.q_le.clear()
         self.state.q_in.clear()
         self.state.q_r.clear()

@@ -16,10 +16,27 @@ lanes in the order their data arrives. Once a request's ready time has
 passed, no later-scheduled request can be ahead of it in that order (new
 commits always become ready at or after the current round). The engine
 exploits this: each round it *finalizes* the start/finish of every slot
-whose ready time has passed via a ``lax.scan`` lane recursion in ready
-order, possibly assigning start times in the future, and leaves in-transfer
-slots open. That is exactly the schedule the event heap would produce,
-without events.
+whose computed start time has arrived via a ``lax.scan`` lane recursion in
+ready order, and leaves in-transfer and still-queued slots open. That is
+exactly the schedule the event heap would produce, without events.
+Finalization is deferred to the window a start actually falls in (rather
+than eagerly booking future starts): within one edge, start times are
+nondecreasing along the ready-order scan — a deferred slot only postpones
+a per-edge suffix, so deferral never changes the schedule, and it is what
+makes mid-rollout faults tractable (an edge failure must be able to orphan
+every not-yet-finished slot without unwinding lane state).
+
+Faults (``repro.resilience``): when the arrival batch carries materialized
+fault rows (``alive``/``speed``/``jitter`` from
+``resilience.faults.attach_faults``), ``step_round`` switches into fault
+mode — row r is applied at the round-r scheduling instant, orphans on
+newly-dead edges are re-admitted at the nearest alive edge (the oracle's
+failover rule), and arrivals are source-remapped exactly like the oracle's
+two-step admission (arrival-time failover under the previous round's
+liveness, then fail-event re-admission under the new one). An optional
+:class:`repro.resilience.ResilienceConfig` on the engine config adds
+admission control (heuristic or policy-supplied), circuit breaking with
+half-open probes, and retry backoff on top.
 
 State layout (Q edges, L = replicas_high lanes, Z = num_rounds *
 max_per_round request slots; all leaves fixed-shape, so a leading batch
@@ -29,13 +46,16 @@ axis vmaps):
     speed (Q,)  ct ()  t ()  round () i32  completed () i32
     lane_free (Q,L)                       INF beyond an edge's zeta lanes
     slot_size/src/edge/submit/ready/start/finish (Z,)   edge=-1 => empty
+    slot_jitter/slot_retries (Z,)         fault-mode runtime noise / retries
+    alive (Q,)  breaker_open/trips/healthy (Q,)   fault + breaker state
+    shed/dropped/retried () i32           admission & overflow accounting
     phi_n/sx/sy/sxx/sxy (Q,)              running LSQ sums (learn_phi mode)
 
 Deliberate deviations from the oracle (documented, not bugs): execution is
-deterministic (the oracle's ``exec_noise`` models measurement jitter; the
-engine simulates the mean dynamics — pin the oracle with ``exec_noise=0``),
-there are no edge failures/recoveries, and online phi fitting uses running
-sums over the whole rollout rather than a sliding window.
+deterministic unless fault-mode jitter is injected (the oracle's
+``exec_noise`` models measurement jitter; pin the oracle with
+``exec_noise=0``), and online phi fitting uses running sums over the whole
+rollout rather than a sliding window.
 """
 from __future__ import annotations
 
@@ -49,14 +69,24 @@ import numpy as np
 from repro.core.inference import make_policy_assign
 from repro.core.objective import makespan
 from repro.core.state import slot_workload_features
+from repro.resilience.policies import (ResilienceConfig, admission_mask,
+                                       breaker_step, dispatch_mask,
+                                       nearest_alive, probe_cap)
 from repro.serving import rounds
 
 #: Sentinel for "never" (empty lane slots, un-ready/un-started requests).
 INF = 1e30
 #: Horizon passed to :func:`advance` to drain every committed request.
 DRAIN_HORIZON = 1e7
+#: Ready-time nudge for retried orphans: in the oracle, a fail event's
+#: re-admissions join the pool after the window's fresh arrivals, so engine
+#: retries must sort after same-instant fresh local commits in the ready
+#: order (large enough to survive float32 rounding at rollout timescales).
+RETRY_EPS = 1e-6
 
-#: assign_fn(key, instance) -> (A,) int32 execution-edge per pending request.
+#: assign_fn(key, instance) -> (A,) int32 execution-edge per pending
+#: request, or an (assign, admit) tuple when the policy also decides
+#: admission (see core.inference.make_policy_assign(admission=True)).
 AssignFn = Callable[[jax.Array, dict], jax.Array]
 
 
@@ -79,6 +109,7 @@ class EngineConfig:
     max_per_round: int = 16        # padded arrivals per round (slot cols)
     learn_phi: bool = False        # online phi fitting vs oracle phi_true
     phi_min_samples: int = 8
+    resilience: Optional[ResilienceConfig] = None
 
     @property
     def num_slots(self) -> int:
@@ -119,6 +150,15 @@ def init_state(cfg: EngineConfig, seed: int = 0) -> dict:
         "slot_ready": np.full(z, INF, np.float32),
         "slot_start": np.full(z, INF, np.float32),
         "slot_finish": np.full(z, INF, np.float32),
+        "slot_jitter": np.ones(z, np.float32),
+        "slot_retries": np.zeros(z, np.float32),
+        "alive": np.ones(q, np.float32),
+        "breaker_open": np.full(q, -1.0, np.float32),
+        "breaker_trips": np.zeros(q, np.float32),
+        "breaker_healthy": np.zeros(q, np.float32),
+        "shed": np.int32(0),
+        "dropped": np.int32(0),
+        "retried": np.int32(0),
         "phi_n": np.zeros(q, np.float32),
         "phi_sx": np.zeros(q, np.float32),
         "phi_sy": np.zeros(q, np.float32),
@@ -140,8 +180,13 @@ def init_batch(cfg: EngineConfig, seeds) -> dict:
 
 def advance(state: dict, t_new, cfg: EngineConfig) -> dict:
     """Move time forward to ``t_new``: finalize the lane schedule of every
-    slot whose data arrives by ``t_new`` (ready order; mirrors the oracle's
-    FIFO lane recursion — see module docstring) and book completions."""
+    slot whose start time arrives by ``t_new`` (ready order; mirrors the
+    oracle's FIFO lane recursion — see module docstring) and book
+    completions. A slot whose computed start would land past ``t_new`` is
+    left open and re-derived next round — within one edge, starts are
+    nondecreasing along the ready-order scan, so deferral postpones a
+    per-edge suffix without changing the schedule (and keeps lane state
+    clean if a fault orphans the slot first)."""
     startable = ((state["slot_edge"] >= 0) & (state["slot_start"] > INF / 2)
                  & (state["slot_ready"] <= t_new))
     keys = jnp.where(startable, state["slot_ready"], INF)
@@ -149,16 +194,17 @@ def advance(state: dict, t_new, cfg: EngineConfig) -> dict:
 
     def body(carry, idx):
         lane_free, start, finish, psums = carry
-        ok = keys[idx] < INF / 2
         e = jnp.clip(state["slot_edge"][idx], 0, cfg.num_edges - 1)
         lanes = lane_free[e]
         lane = jnp.argmin(lanes)
         st = jnp.maximum(state["slot_ready"][idx], lanes[lane])
+        ok = (keys[idx] < INF / 2) & (st <= t_new)
         size = state["slot_size"][idx]
-        # jnp mirror of rounds.service_runtime (jitter == 1: deterministic)
+        # jnp mirror of rounds.service_runtime
         rt = jnp.maximum(
             rounds.MIN_RUNTIME,
             (state["phi_true"][e, 0] * size + state["phi_true"][e, 1])
+            * jnp.maximum(state["slot_jitter"][idx], rounds.MIN_JITTER)
             * state["speed"][e],
         )
         fin = st + rt
@@ -201,6 +247,70 @@ def advance(state: dict, t_new, cfg: EngineConfig) -> dict:
     return out
 
 
+def apply_faults(state: dict, arr: dict, cfg: EngineConfig) -> dict:
+    """Apply this round's fault row (``arr["alive"]``/``arr["speed"]``) at
+    the current scheduling instant — the array twin of the oracle's
+    fail/recover/straggle events firing just before the CC round.
+
+    A newly-dead edge loses its lanes and orphans every not-yet-finished
+    slot (queued, in transfer, or mid-execution — the oracle's
+    ``SimEdge.fail``); orphans are re-admitted as local retries at the
+    nearest alive edge with a small ready-time nudge (re-admissions sort
+    after the window's fresh arrivals, as in the event heap). A recovered
+    edge gets fresh lanes at the current time."""
+    res = cfg.resilience
+    t = state["t"]
+    prev_alive = state["alive"] > 0
+    alive = arr["alive"] > 0
+    died = prev_alive & ~alive
+    recovered = ~prev_alive & alive
+
+    out = dict(state)
+    out["alive"] = alive.astype(jnp.float32)
+    out["speed"] = arr["speed"].astype(jnp.float32)
+    lanes = jnp.arange(state["lane_free"].shape[-1])[None, :]
+    fresh = jnp.where(lanes < state["replicas"][:, None], t, INF)
+    lane_free = jnp.where(died[:, None], INF, state["lane_free"])
+    out["lane_free"] = jnp.where(recovered[:, None], fresh, lane_free)
+
+    e = jnp.clip(state["slot_edge"], 0, cfg.num_edges - 1)
+    orphan = ((state["slot_edge"] >= 0) & died[e]
+              & (state["slot_finish"] > t))
+    retries = state["slot_retries"] + orphan
+    new_src = nearest_alive(state["w"], alive,
+                            jnp.clip(state["slot_src"], 0, cfg.num_edges - 1))
+    backoff = 0.0
+    if res is not None and res.retry_backoff_rounds:
+        backoff = (res.retry_backoff_rounds * cfg.round_interval
+                   * jnp.exp2(jnp.clip(retries - 1.0, 0.0,
+                                       float(res.retry_backoff_cap))))
+    out["slot_src"] = jnp.where(orphan, new_src, state["slot_src"])
+    out["slot_edge"] = jnp.where(orphan, new_src, state["slot_edge"])
+    out["slot_ready"] = jnp.where(orphan, t + RETRY_EPS + backoff,
+                                  state["slot_ready"])
+    out["slot_start"] = jnp.where(orphan, INF, state["slot_start"])
+    out["slot_finish"] = jnp.where(orphan, INF, state["slot_finish"])
+    out["slot_retries"] = retries.astype(jnp.float32)
+    out["retried"] = state["retried"] + jnp.sum(orphan).astype(jnp.int32)
+    if res is not None and res.breaker:
+        (out["breaker_open"], out["breaker_trips"],
+         out["breaker_healthy"]) = breaker_step(
+            state["breaker_open"], state["breaker_trips"],
+            state["breaker_healthy"], died, alive, t,
+            cfg.round_interval, res)
+    return out
+
+
+def dispatchable_edges(state: dict, cfg: EngineConfig):
+    """(Q,) bool dispatch eligibility: alive edges, minus open circuit
+    breakers when breaking is enabled (all ones in the fault-free world)."""
+    alive = state["alive"] > 0
+    res = cfg.resilience
+    if res is not None and res.breaker:
+        return dispatch_mask(alive, state["breaker_open"], state["t"])
+    return alive
+
+
 def round_instance(state: dict, arr: dict, cfg: EngineConfig) -> dict:
     """Freeze (state, this round's arrivals) into a scheduling instance with
     the same layout as core.instances/core.state.snapshot_instance, so the
@@ -219,7 +329,7 @@ def round_instance(state: dict, arr: dict, cfg: EngineConfig) -> dict:
         "ct": state["ct"],
         "req_src": arr["src"].astype(jnp.int32),
         "req_size": jnp.where(arr["mask"], arr["size"], 0.0),
-        "edge_mask": jnp.ones(cfg.num_edges, bool),
+        "edge_mask": dispatchable_edges(state, cfg),
         "req_mask": arr["mask"],
     }
     if "rid" in arr:  # pass-through for scripted/replay assign fns
@@ -227,10 +337,15 @@ def round_instance(state: dict, arr: dict, cfg: EngineConfig) -> dict:
     return inst
 
 
-def commit(state: dict, arr: dict, assign, cfg: EngineConfig) -> dict:
+def commit(state: dict, arr: dict, assign, cfg: EngineConfig,
+           admit=None, ready_offset=None) -> dict:
     """Dispatch this round's arrivals (CC steps v-vi): write them into the
     round's slot row with their execution edge and data-ready time (local:
-    now; remote: now + eq (2) transfer delay)."""
+    now; remote: now + eq (2) transfer delay). ``admit`` is an optional
+    (A,) bool admission mask — non-admitted arrivals are shed (never
+    written to the slot table, counted in ``state["shed"]``).
+    ``ready_offset`` is an optional (A,) per-arrival ready-time bump
+    (fault mode: re-admitted arrivals sort after native fresh ones)."""
     a_cols = cfg.max_per_round
     if arr["size"].shape[-1] != a_cols:
         raise ValueError(
@@ -241,10 +356,13 @@ def commit(state: dict, arr: dict, assign, cfg: EngineConfig) -> dict:
     assign = assign.astype(jnp.int32)
     src = arr["src"].astype(jnp.int32)
     mask = arr["mask"]
+    sched = mask if admit is None else mask & admit
     size = jnp.where(mask, arr["size"], 0.0).astype(jnp.float32)
     delay = rounds.transfer_delay(state["ct"], size,
                                   state["w"][src, jnp.clip(assign, 0)])
     ready = state["t"] + jnp.where(assign == src, 0.0, delay)
+    if ready_offset is not None:
+        ready = ready + ready_offset
     base = state["round"] * a_cols
 
     def put(dst, vals):
@@ -253,11 +371,18 @@ def commit(state: dict, arr: dict, assign, cfg: EngineConfig) -> dict:
     out = dict(state)
     out["slot_size"] = put(state["slot_size"], size)
     out["slot_src"] = put(state["slot_src"], src)
-    out["slot_edge"] = put(state["slot_edge"], jnp.where(mask, assign, -1))
+    out["slot_edge"] = put(state["slot_edge"], jnp.where(sched, assign, -1))
     out["slot_submit"] = put(state["slot_submit"],
                              arr["t"].astype(jnp.float32))
     out["slot_ready"] = put(state["slot_ready"],
-                            jnp.where(mask, ready, INF).astype(jnp.float32))
+                            jnp.where(sched, ready, INF).astype(jnp.float32))
+    if "jitter" in arr:
+        out["slot_jitter"] = put(state["slot_jitter"],
+                                 arr["jitter"].astype(jnp.float32))
+    if admit is not None:
+        out["shed"] = state["shed"] + jnp.sum(mask & ~admit).astype(jnp.int32)
+    if "dropped" in arr:  # materializer overflow clips, per round
+        out["dropped"] = state["dropped"] + arr["dropped"].astype(jnp.int32)
     out["round"] = state["round"] + 1
     return out
 
@@ -265,13 +390,55 @@ def commit(state: dict, arr: dict, assign, cfg: EngineConfig) -> dict:
 def step_round(state: dict, arr: dict, assign_fn: AssignFn,
                cfg: EngineConfig, key) -> tuple[dict, dict]:
     """One scheduling round (paper Fig. 2 iii-vi): advance the cluster one
-    round interval, evaluate per-edge workload state, schedule this round's
-    arrivals, dispatch. Returns (state, per-round info)."""
+    round interval, apply this round's fault row (if the arrival batch
+    carries one), evaluate per-edge workload state, schedule this round's
+    arrivals, apply admission control, dispatch. Returns (state, per-round
+    info)."""
+    res = cfg.resilience
+    fault_mode = "alive" in arr
+    ready_offset = None
     prev_completed = state["completed"]
+    prev_shed, prev_retried = state["shed"], state["retried"]
     state = advance(state, state["t"] + cfg.round_interval, cfg)
+    if fault_mode:
+        # two-step source failover, mirroring the oracle's admission path:
+        # arrivals fail over under the liveness they arrived under, then a
+        # fail event re-admits the dead edge's pool under the new row.
+        # Arrivals caught by that second step were sitting in the dying
+        # edge's queue when it failed — they re-enter the pool *after* the
+        # surviving edges' native arrivals (rid order within the orphan
+        # group matches, since committed orphans always have smaller rids).
+        arr = dict(arr)
+        arr["src"] = nearest_alive(state["w"], state["alive"] > 0,
+                                   jnp.clip(arr["src"].astype(jnp.int32), 0,
+                                            cfg.num_edges - 1))
+        state = apply_faults(state, arr, cfg)
+        readmitted = ~(state["alive"] > 0)[arr["src"]]
+        ready_offset = RETRY_EPS * readmitted
+        arr["src"] = nearest_alive(state["w"], state["alive"] > 0,
+                                   arr["src"])
     inst = round_instance(state, arr, cfg)
-    assign = assign_fn(key, inst)
-    state = commit(state, arr, assign, cfg)
+    decision = assign_fn(key, inst)
+    assign, admit = (decision if isinstance(decision, tuple)
+                     else (decision, None))
+    if fault_mode:
+        # clamp any dispatch outside the eligible set to the nearest
+        # eligible edge (policies see edge_mask, but must not be able to
+        # resurrect a dead edge by emitting its index)
+        assign = nearest_alive(state["w"], inst["edge_mask"],
+                               jnp.clip(assign.astype(jnp.int32), 0,
+                                        cfg.num_edges - 1))
+        if res is not None and res.breaker:
+            half_open = ((state["alive"] > 0)
+                         & (state["t"] >= state["breaker_open"])
+                         & (state["breaker_trips"] > 0))
+            closed = inst["edge_mask"] & ~half_open
+            assign = probe_cap(state["w"], assign, arr["mask"],
+                               arr["src"], half_open, closed, res)
+    if admit is None and res is not None and res.admission != "none":
+        admit = admission_mask(res, inst, assign)
+    state = commit(state, arr, assign, cfg, admit=admit,
+                   ready_offset=ready_offset)
     finish = state["slot_finish"]
     done = finish <= state["t"]
     info = {
@@ -280,6 +447,8 @@ def step_round(state: dict, arr: dict, assign_fn: AssignFn,
         "assign": assign.astype(jnp.int32),
         "completed": state["completed"],
         "round_completions": state["completed"] - prev_completed,
+        "round_shed": state["shed"] - prev_shed,
+        "round_retries": state["retried"] - prev_retried,
         "makespan": jnp.max(jnp.where(done, finish, 0.0)),
     }
     return state, info
@@ -320,17 +489,35 @@ def make_rollout(cfg: EngineConfig, assign_fn: AssignFn, *,
     return jax.jit(run)
 
 
-def summarize(state: dict) -> dict:
+def summarize(state: dict, slo: Optional[float] = None) -> dict:
     """Host-side metrics mirroring ``MultiEdgeSim.metrics()`` keys, computed
     from the final slot table. Works on batched states (leading axis is
-    aggregated as one population)."""
+    aggregated as one population).
+
+    ``submitted`` counts every arrival the engine saw — dispatched, shed by
+    admission control, or dropped by the materializer's overflow clip — so
+    ``shed_rate`` and the SLO metrics are honest about load that never
+    reached a slot. With ``slo`` set, a violation is a completion slower
+    than the SLO *or* any request that was shed, dropped, or stranded on a
+    dead edge (shedding is never a free lunch for the violation metric)."""
     s = jax.device_get(state)
     committed = s["slot_edge"] >= 0
     done = committed & (s["slot_finish"] <= np.expand_dims(
         s["t"], axis=tuple(range(np.ndim(s["t"]), s["slot_finish"].ndim))))
-    submitted = int(committed.sum())
+    shed = int(np.sum(s["shed"]))
+    dropped = int(np.sum(s["dropped"]))
+    stranded = int(committed.sum() - done.sum())
+    submitted = int(committed.sum()) + shed + dropped
     completed = int(done.sum())
-    out = {"completed": completed, "submitted": submitted}
+    out = {
+        "completed": completed,
+        "submitted": submitted,
+        "shed_requests": shed,
+        "dropped_requests": dropped,
+        "stranded_requests": stranded,
+        "retried_requests": int((s["slot_retries"][committed] > 0).sum()),
+        "shed_rate": (shed + dropped) / max(submitted, 1),
+    }
     if not completed:
         return out
     resp = (s["slot_finish"] - s["slot_submit"])[done]
@@ -345,6 +532,10 @@ def summarize(state: dict) -> dict:
                                zip(*np.unique(edges, return_counts=True))},
         "makespan": float(s["slot_finish"][done].max()),
     })
+    if slo is not None:
+        violations = int((resp > slo).sum()) + shed + dropped + stranded
+        out["slo"] = float(slo)
+        out["slo_violation_frac"] = violations / max(submitted, 1)
     return out
 
 
@@ -361,8 +552,9 @@ def local_assign(key, inst):
 
 def greedy_assign(key, inst):
     """jnp twin of heuristics.solve_greedy: size-descending greedy insertion,
-    each request to the edge minimizing the incremental makespan (later
-    requests parked at their source during evaluation)."""
+    each request to the eligible edge (``edge_mask``) minimizing the
+    incremental makespan (later requests parked at their source during
+    evaluation)."""
     del key
     num_edges = inst["w"].shape[-1]
     sizes, rmask = inst["req_size"], inst["req_mask"]
@@ -373,6 +565,7 @@ def greedy_assign(key, inst):
         costs = jax.vmap(
             lambda q: makespan(inst, cur.at[z].set(q))
         )(jnp.arange(num_edges, dtype=jnp.int32))
+        costs = jnp.where(inst["edge_mask"], costs, jnp.inf)
         best = jnp.argmin(costs).astype(jnp.int32)
         return jnp.where(rmask[z], cur.at[z].set(best), cur), None
 

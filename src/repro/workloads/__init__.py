@@ -7,19 +7,22 @@ from repro.workloads.batch import materialize_round_batch, materialize_rounds
 from repro.workloads.processes import (DiurnalArrivals, FlashCrowdArrivals,
                                        InhomogeneousPoisson, MMPPArrivals,
                                        PoissonArrivals)
-from repro.workloads.trace import (SCHEMA, TraceWorkload, read_trace,
-                                   record_trace, write_trace)
+from repro.workloads.trace import (SCHEMA, SCHEMA_V1, SCHEMA_V2, FaultEvent,
+                                   TraceWorkload, read_trace, record_trace,
+                                   write_trace)
 from repro.workloads.scenarios import (ScenarioSpec,
                                        instance_config_for_scenario,
                                        list_scenarios, register_scenario,
-                                       scenario, scenario_spec)
+                                       scenario, scenario_fault_spec,
+                                       scenario_spec)
 
 __all__ = [
     "Arrival", "Merged", "SizeSpec", "Workload", "edge_weights", "merge",
     "workload_rng", "materialize_rounds", "materialize_round_batch",
     "PoissonArrivals", "InhomogeneousPoisson", "DiurnalArrivals",
     "FlashCrowdArrivals", "MMPPArrivals",
-    "SCHEMA", "TraceWorkload", "read_trace", "record_trace", "write_trace",
+    "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "FaultEvent", "TraceWorkload",
+    "read_trace", "record_trace", "write_trace",
     "ScenarioSpec", "register_scenario", "scenario", "scenario_spec",
-    "list_scenarios", "instance_config_for_scenario",
+    "scenario_fault_spec", "list_scenarios", "instance_config_for_scenario",
 ]

@@ -16,6 +16,10 @@ dict of (R, A) arrays ``make_rollout`` scans over:
                       event simulator assigns when driven by the same
                       (workload, seed), which is what trace-equivalence
                       tests key on)
+    dropped (R,) i32  arrivals clipped from each round by the overflow
+                      policy (always 0 with overflow='error'); the engine
+                      folds these into its drop accounting so shed-rate
+                      metrics stay honest about clipped load
 
 Determinism matches ``MultiEdgeSim.drive``: the stream is drawn from
 ``workload_rng(seed)``, so materializing and driving the same (workload,
@@ -56,6 +60,7 @@ def _pack(buckets: list[list], width: int, overflow: str) -> dict:
         "size": np.zeros((num_rounds, width), np.float32),
         "mask": np.zeros((num_rounds, width), bool),
         "rid": np.zeros((num_rounds, width), np.int32),
+        "dropped": np.zeros(num_rounds, np.int32),
     }
     for r, row in enumerate(buckets):
         if len(row) > width:
@@ -64,6 +69,7 @@ def _pack(buckets: list[list], width: int, overflow: str) -> dict:
                     f"round {r} holds {len(row)} arrivals but max_per_round "
                     f"is {width}; raise max_per_round or pass "
                     f"overflow='clip'")
+            out["dropped"][r] = len(row) - width
             row = row[:width]  # overflow == "clip": drop the tail
         for j, (t, edge, size, rid) in enumerate(row):
             out["t"][r, j] = t

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
+from repro.resilience.faults import FaultSpec
 from repro.workloads.base import SizeSpec, Workload
 from repro.workloads.processes import (DiurnalArrivals, FlashCrowdArrivals,
                                        MMPPArrivals, PoissonArrivals)
@@ -32,6 +33,9 @@ class ScenarioSpec:
     # InstanceConfig field overrides (size_dist/size_params/source_skew/...)
     # applied by instance_config_for_scenario for static-instance consumers.
     instance_overrides: Optional[dict] = None
+    # Chaos scenarios: the fault process injected alongside the arrivals
+    # (materialized per seed by repro.resilience.faults). None = fault-free.
+    fault_spec: Optional[FaultSpec] = None
 
 
 _REGISTRY: dict[str, ScenarioSpec] = {}
@@ -40,11 +44,13 @@ _REGISTRY: dict[str, ScenarioSpec] = {}
 def register_scenario(name: str, factory: Callable[..., Workload], *,
                       description: str = "",
                       instance_overrides: Optional[dict] = None,
+                      fault_spec: Optional[FaultSpec] = None,
                       overwrite: bool = False) -> ScenarioSpec:
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"scenario {name!r} already registered")
     spec = ScenarioSpec(name=name, factory=factory, description=description,
-                        instance_overrides=instance_overrides)
+                        instance_overrides=instance_overrides,
+                        fault_spec=fault_spec)
     _REGISTRY[name] = spec
     return spec
 
@@ -62,6 +68,14 @@ def scenario(name: str, **overrides) -> Workload:
 
 def scenario_spec(name: str) -> ScenarioSpec:
     return _REGISTRY[name]
+
+
+def scenario_fault_spec(name: str) -> Optional[FaultSpec]:
+    """The fault process a scenario injects (None for fault-free ones).
+    Consumers materialize it per seed via ``resilience.faults`` — e.g.
+    ``temporal_train`` fault-injects chaos-scenario episodes automatically,
+    and ``benchmarks/scenario_sweep.py`` drives both engines with it."""
+    return _REGISTRY[name].fault_spec
 
 
 def list_scenarios() -> dict[str, str]:
@@ -138,4 +152,40 @@ register_scenario(
                                  "mean_sojourn": (2.0, 0.25), **kw}),
     description="2-state Markov-modulated Poisson: calm/burst regime "
                 "switching (classic bursty edge traffic).",
+)
+
+# -- chaos scenarios (resilience subsystem) ----------------------------------
+# Same arrival vocabulary, plus a registered fault process: the engines
+# apply the materialized trajectory identically (equivalence-tested), and
+# temporal_train injects it into every training episode.
+
+register_scenario(
+    "chaos-rolling-failure",
+    lambda **kw: PoissonArrivals(**{"rate": 180.0, **kw}),
+    description="Overload + a rolling outage: each edge in turn goes down "
+                "for two rounds mid-episode, orphaning its queue onto the "
+                "survivors while arrivals outrun the degraded capacity. "
+                "The admission-control proving ground.",
+    fault_spec=FaultSpec(rolling=(2, 2)),
+)
+
+register_scenario(
+    "chaos-flash-failure",
+    lambda **kw: FlashCrowdArrivals(**{"base_rate": 10.0, "multiplier": 10.0,
+                                       "spike_start": 1.0,
+                                       "spike_duration": 0.5, **kw}),
+    description="Flash crowd on edge 0 while that same edge fails during "
+                "the spike window: failover and the crowd collide.",
+    instance_overrides={"source_skew": 4.0},
+    fault_spec=FaultSpec(scripted_failures=((0, 4, 8),)),
+)
+
+register_scenario(
+    "chaos-straggler-storm",
+    lambda **kw: PoissonArrivals(**{"rate": 25.0, **kw}),
+    description="Markov straggler churn (5x slowdowns) plus lognormal "
+                "per-request runtime jitter: perception must route around "
+                "slow edges it was never told about.",
+    fault_spec=FaultSpec(straggle_prob=0.2, straggle_recover_prob=0.5,
+                         straggle_factor=5.0, jitter_sigma=0.15),
 )

@@ -12,30 +12,68 @@ replayed run reproduces the live run's completion metrics under the same
 simulator seed. A :class:`TraceWorkload` satisfies the same ``Workload``
 protocol as the synthetic generators, so the three consumers (simulator
 ``drive``, scenario sweep, examples) cannot tell a trace from a process.
+
+Schema v2 adds an optional ``events`` section to the header — the fault
+timeline (failures / recoveries / straggler speed changes) captured as
+absolute-time :class:`FaultEvent` records:
+
+    {"schema": "corais.trace.v2", "num_edges": 5, "meta": {...},
+     "events": [{"t": 0.75, "kind": "fail", "edge": 2},
+                {"t": 1.25, "kind": "recover", "edge": 2},
+                {"t": 1.25, "kind": "straggle", "edge": 0, "factor": 4.0}]}
+
+A trace without fault events is always written under the v1 schema, byte
+for byte what pre-v2 code produced, and v1 files read back unchanged —
+``fault_events`` is just empty. ``repro.resilience.faults`` converts
+between these records and the engine's per-round event tensors.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Iterable, Optional
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
 from repro.workloads.base import Arrival, Workload, workload_rng
 
-SCHEMA = "corais.trace.v1"
-_SUPPORTED_SCHEMAS = (SCHEMA,)
+SCHEMA_V1 = "corais.trace.v1"
+SCHEMA_V2 = "corais.trace.v2"
+SCHEMA = SCHEMA_V1  # default write schema (used when a trace has no faults)
+_SUPPORTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2)
+
+FAULT_KINDS = ("fail", "recover", "straggle")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One entry of a trace's fault timeline: at wall time ``t`` edge
+    ``edge`` fails, recovers, or changes straggler speed to ``factor``
+    (``factor`` is only meaningful for kind="straggle"; 1.0 = nominal)."""
+
+    t: float
+    kind: str
+    edge: int
+    factor: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"supported: {FAULT_KINDS}")
 
 
 @dataclasses.dataclass(frozen=True)
 class TraceWorkload:
     """A recorded arrival stream. ``arrivals`` ignores the rng (a trace is
-    already fully determined) and replays events with t <= until."""
+    already fully determined) and replays events with t <= until. v2 traces
+    additionally carry ``fault_events`` — the recorded fault timeline — for
+    consumers that replay the chaos alongside the arrivals."""
 
     events: tuple
     num_edges: int = 0
     meta: Optional[dict] = None
     schema: str = SCHEMA
+    fault_events: tuple = ()
 
     def arrivals(self, rng, num_edges, until):
         for a in self.events:
@@ -48,13 +86,19 @@ class TraceWorkload:
 
 
 def write_trace(path: str, arrivals: Iterable[Arrival], *, num_edges: int,
-                meta: Optional[dict] = None) -> int:
-    """Write arrivals (any iterable, consumed once) as a v1 JSONL trace.
-    Returns the number of events written."""
+                meta: Optional[dict] = None,
+                fault_events: Sequence[FaultEvent] = ()) -> int:
+    """Write arrivals (any iterable, consumed once) as a JSONL trace.
+    Returns the number of events written. With ``fault_events`` the header
+    is stamped ``corais.trace.v2`` and carries the fault timeline; without
+    them the file is a byte-identical v1 trace."""
     n = 0
     with open(path, "w") as f:
-        header = {"schema": SCHEMA, "num_edges": int(num_edges),
-                  "meta": meta or {}}
+        header = {"schema": SCHEMA_V2 if fault_events else SCHEMA_V1,
+                  "num_edges": int(num_edges), "meta": meta or {}}
+        if fault_events:
+            header["events"] = [_fault_row(ev, num_edges)
+                                for ev in fault_events]
         f.write(json.dumps(header) + "\n")
         for a in arrivals:
             row = {"t": float(a.t), "edge": int(a.edge),
@@ -69,7 +113,8 @@ def write_trace(path: str, arrivals: Iterable[Arrival], *, num_edges: int,
 def record_trace(path: str, workload: Workload, *, num_edges: int,
                  until: float, seed: int = 0,
                  rng: Optional[np.random.Generator] = None,
-                 meta: Optional[dict] = None) -> int:
+                 meta: Optional[dict] = None,
+                 fault_events: Sequence[FaultEvent] = ()) -> int:
     """Materialize ``workload`` over [0, until] and persist it. The same
     (workload, seed, num_edges, until) always records the same trace, and
     it is the exact stream ``MultiEdgeSim.drive(workload, seed=seed)``
@@ -79,7 +124,39 @@ def record_trace(path: str, workload: Workload, *, num_edges: int,
             "workload": repr(workload)}
     info.update(meta or {})
     return write_trace(path, workload.arrivals(rng, num_edges, until),
-                       num_edges=num_edges, meta=info)
+                       num_edges=num_edges, meta=info,
+                       fault_events=fault_events)
+
+
+def _fault_row(ev: FaultEvent, num_edges: int) -> dict:
+    if num_edges and not 0 <= int(ev.edge) < num_edges:
+        raise ValueError(f"fault event edge {ev.edge} outside the trace's "
+                         f"0..{num_edges - 1}")
+    row = {"t": float(ev.t), "kind": ev.kind, "edge": int(ev.edge)}
+    if ev.kind == "straggle":
+        row["factor"] = float(ev.factor)
+    return row
+
+
+def _parse_fault_events(header: dict, path: str) -> tuple:
+    rows = header.get("events") or ()
+    out, last_t = [], -np.inf
+    for i, row in enumerate(rows):
+        try:
+            ev = FaultEvent(t=float(row["t"]), kind=str(row["kind"]),
+                            edge=int(row["edge"]),
+                            factor=float(row.get("factor", 1.0)))
+        except (KeyError, ValueError) as exc:
+            raise ValueError(f"{path}: bad fault event {i}: {exc}") from None
+        n_edges = int(header.get("num_edges", 0))
+        if n_edges and not 0 <= ev.edge < n_edges:
+            raise ValueError(f"{path}: fault event {i}: edge {ev.edge} "
+                             f"outside the trace's 0..{n_edges - 1}")
+        if ev.t < last_t:
+            raise ValueError(f"{path}: fault events out of order")
+        last_t = ev.t
+        out.append(ev)
+    return tuple(out)
 
 
 def read_trace(path: str) -> TraceWorkload:
@@ -94,6 +171,9 @@ def read_trace(path: str) -> TraceWorkload:
             raise ValueError(
                 f"{path}: unsupported trace schema {schema!r} "
                 f"(supported: {_SUPPORTED_SCHEMAS})")
+        if schema == SCHEMA_V1 and "events" in header:
+            raise ValueError(f"{path}: fault events require {SCHEMA_V2}")
+        fault_events = _parse_fault_events(header, path)
         events = []
         last_t = -np.inf
         for lineno, line in enumerate(f, start=2):
@@ -113,4 +193,5 @@ def read_trace(path: str) -> TraceWorkload:
             events.append(a)
     return TraceWorkload(events=tuple(events),
                          num_edges=int(header.get("num_edges", 0)),
-                         meta=header.get("meta") or {}, schema=schema)
+                         meta=header.get("meta") or {}, schema=schema,
+                         fault_events=fault_events)

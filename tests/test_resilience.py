@@ -1,0 +1,358 @@
+"""Resilience subsystem: fault materialization, admission control (heuristic
+and trained), circuit breaking, retry backoff, drop accounting, and the
+fault-injected temporal training path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.inference import make_policy_assign
+from repro.core.policy import PolicyConfig, corais_admit, corais_encode, corais_init
+from repro.resilience import ResilienceConfig
+from repro.resilience import faults as faults_lib
+from repro.resilience.policies import (admission_mask, breaker_step,
+                                       dispatch_mask, probe_cap)
+from repro.serving import engine
+from repro.serving.rounds import MIN_JITTER
+from repro.workloads import PoissonArrivals, scenario, scenario_fault_spec
+from repro.workloads.batch import materialize_rounds
+
+Q, ROUNDS, DT = 5, 12, 0.25
+
+
+# -- fault materialization ---------------------------------------------------
+
+
+def test_materialize_faults_deterministic_and_shaped():
+    spec = faults_lib.FaultSpec(fail_prob=0.3, recover_prob=0.5,
+                                straggle_prob=0.3, straggle_factor=3.0)
+    ev1 = faults_lib.materialize_faults(spec, Q, ROUNDS, seed=7)
+    ev2 = faults_lib.materialize_faults(spec, Q, ROUNDS, seed=7)
+    assert ev1["alive"].shape == ev1["speed"].shape == (ROUNDS, Q)
+    assert ev1["alive"].dtype == bool and ev1["speed"].dtype == np.float32
+    np.testing.assert_array_equal(ev1["alive"], ev2["alive"])
+    np.testing.assert_array_equal(ev1["speed"], ev2["speed"])
+    ev3 = faults_lib.materialize_faults(spec, Q, ROUNDS, seed=8)
+    assert not (np.array_equal(ev1["alive"], ev3["alive"])
+                and np.array_equal(ev1["speed"], ev3["speed"]))
+    assert set(np.unique(ev1["speed"])) <= {np.float32(1.0), np.float32(3.0)}
+
+
+def test_materialize_faults_min_alive_floor():
+    spec = faults_lib.FaultSpec(fail_prob=1.0, recover_prob=0.0, min_alive=2)
+    ev = faults_lib.materialize_faults(spec, Q, ROUNDS, seed=0)
+    assert (ev["alive"].sum(axis=1) >= 2).all()
+    # scripted kills are floored too
+    spec2 = faults_lib.FaultSpec(
+        scripted_failures=tuple((q, 0, ROUNDS) for q in range(Q)))
+    ev2 = faults_lib.materialize_faults(spec2, Q, ROUNDS, seed=0)
+    assert (ev2["alive"].sum(axis=1) >= 1).all()
+
+
+def test_rolling_outage_pattern():
+    ev = faults_lib.materialize_faults(
+        faults_lib.FaultSpec(rolling=(2, 2)), Q, ROUNDS, seed=0)
+    for q in range(Q):
+        lo, hi = 2 + q * 2, min(2 + (q + 1) * 2, ROUNDS)
+        assert not ev["alive"][lo:hi, q].any()
+    assert (ev["alive"].sum(axis=1) >= Q - 1).all()
+
+
+def test_jitter_table_floor_and_identity():
+    spec = faults_lib.FaultSpec(jitter_sigma=2.0)
+    jit = faults_lib.jitter_table(spec, 512, seed=3)
+    assert jit.shape == (512,) and (jit >= MIN_JITTER).all()
+    assert jit.std() > 0
+    np.testing.assert_array_equal(
+        faults_lib.jitter_table(faults_lib.FaultSpec(), 16), np.ones(16))
+
+
+def test_attach_faults_rows_and_padded_jitter():
+    arr = materialize_rounds(scenario("uniform_iid"), Q, ROUNDS, DT, seed=0)
+    spec = faults_lib.FaultSpec(rolling=(2, 2), jitter_sigma=0.3)
+    ev = faults_lib.materialize_faults(spec, Q, ROUNDS, seed=0)
+    jit = faults_lib.jitter_table(spec, int(arr["rid"].max()) + 1, seed=0)
+    out = faults_lib.attach_faults(arr, ev, jit)
+    assert out["alive"].shape == out["speed"].shape == (ROUNDS, Q)
+    assert out["jitter"].shape == arr["mask"].shape
+    # padding slots carry neutral jitter, real slots the rid-table entry
+    np.testing.assert_array_equal(out["jitter"][~arr["mask"]], 1.0)
+    np.testing.assert_allclose(out["jitter"][arr["mask"]],
+                               jit[arr["rid"][arr["mask"]]])
+    with pytest.raises(ValueError, match="rounds"):
+        short = faults_lib.materialize_faults(spec, Q, ROUNDS - 1, seed=0)
+        faults_lib.attach_faults(arr, short, jit)
+
+
+def test_fault_events_round_trip_orders_recovers_first():
+    ev = faults_lib.materialize_faults(
+        faults_lib.FaultSpec(rolling=(2, 2)), Q, ROUNDS, seed=0)
+    evs = faults_lib.fault_events_from_rows(ev, DT)
+    assert evs and all(e.t > 0 for e in evs)
+    assert [e.t for e in evs] == sorted(e.t for e in evs)
+    # a rolling handover round has both a recovery and a failure at the
+    # same instant: the recovery must come first (the oracle's failover
+    # mask must match the engine's atomic row application)
+    by_t = {}
+    for e in evs:
+        by_t.setdefault(e.t, []).append(e.kind)
+    handovers = [k for k in by_t.values() if len(k) > 1]
+    assert handovers and all(k.index("recover") < k.index("fail")
+                             for k in handovers if "recover" in k)
+
+
+# -- admission control -------------------------------------------------------
+
+
+def _overload_instance():
+    arr = materialize_rounds(PoissonArrivals(rate=120.0), Q, 1, DT, seed=0)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=1, round_interval=DT,
+                              max_per_round=arr["mask"].shape[-1])
+    state = jax.tree.map(jnp.asarray, engine.init_state(cfg, seed=0))
+    arr0 = {k: jnp.asarray(v[0]) for k, v in arr.items()}
+    state = engine.advance(state, DT, cfg)
+    return engine.round_instance(state, arr0, cfg), arr0
+
+
+def test_admission_heuristics():
+    inst, arr0 = _overload_instance()
+    assign = inst["req_src"]
+    res_all = ResilienceConfig(admission="none")
+    np.testing.assert_array_equal(admission_mask(res_all, inst, assign),
+                                  np.ones_like(arr0["mask"]))
+    tight = ResilienceConfig(admission="slo_threshold", admit_threshold=1e-4)
+    loose = ResilienceConfig(admission="slo_threshold", admit_threshold=1e4)
+    n_tight = int(jnp.sum(admission_mask(tight, inst, assign) & arr0["mask"]))
+    n_loose = int(jnp.sum(admission_mask(loose, inst, assign) & arr0["mask"]))
+    assert n_tight == 0 and n_loose == int(arr0["mask"].sum())
+    with pytest.raises(ValueError, match="admission"):
+        ResilienceConfig(admission="nope")
+
+
+def test_engine_sheds_under_admission_and_accounts_everything():
+    """Overload + slo_threshold admission: every arrival is either completed
+    or shed, and summarize's population accounting stays exact."""
+    wl = PoissonArrivals(rate=80.0, edge_skew=8.0)
+    arr = materialize_rounds(wl, Q, 8, DT, seed=1)
+    res = ResilienceConfig(admission="slo_threshold", admit_threshold=0.8)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=8, round_interval=DT,
+                              max_per_round=arr["mask"].shape[-1],
+                              resilience=res)
+    run = engine.make_rollout(cfg, engine.local_assign)
+    final, infos = run(engine.init_state(cfg, 1), arr, jax.random.PRNGKey(0))
+    m = engine.summarize(final, slo=res.slo)
+    n = int(arr["mask"].sum())
+    assert m["submitted"] == n
+    assert 0 < m["shed_requests"] < n
+    assert m["completed"] + m["shed_requests"] == n
+    assert m["shed_rate"] == pytest.approx(m["shed_requests"] / n)
+    assert 0.0 < m["slo_violation_frac"] <= 1.0
+    assert int(jax.device_get(infos["round_shed"]).sum()) == m["shed_requests"]
+    # and shedding the expensive tail must actually help the served mean
+    cfg_open = engine.EngineConfig(num_edges=Q, num_rounds=8,
+                                   round_interval=DT,
+                                   max_per_round=arr["mask"].shape[-1])
+    run_open = engine.make_rollout(cfg_open, engine.local_assign)
+    final_open, _ = run_open(engine.init_state(cfg_open, 1), arr,
+                             jax.random.PRNGKey(0))
+    m_open = engine.summarize(final_open)
+    assert m["mean_response"] < m_open["mean_response"]
+
+
+def test_policy_admission_head_plumbing():
+    """admit_head=True grows an admit MLP; corais_admit starts near
+    admit-all (positive bias) and the engine consumes (assign, admit)."""
+    pcfg = PolicyConfig(d_model=32, ff_hidden=64, edge_layers=1,
+                        request_layers=1, admit_head=True, admit_hidden=16)
+    params, pstate = corais_init(jax.random.PRNGKey(0), pcfg)
+    assert "admit" in params
+    arr = materialize_rounds(scenario("uniform_iid"), Q, 6, DT, seed=0)
+    res = ResilienceConfig(admission="policy")
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=6, round_interval=DT,
+                              max_per_round=arr["mask"].shape[-1],
+                              resilience=res)
+    run = engine.make_rollout(
+        cfg, make_policy_assign(params, pstate, pcfg, admission=True))
+    final, _ = run(engine.init_state(cfg, 0), arr, jax.random.PRNGKey(1))
+    m = engine.summarize(final)
+    n = int(arr["mask"].sum())
+    assert m["submitted"] == n
+    assert m["completed"] + m["shed_requests"] == n
+    assert m["shed_requests"] < n / 4  # fresh head ~ admit-all
+
+    # a head-less policy must fail loudly, not silently admit-all
+    plain, pstate2 = corais_init(jax.random.PRNGKey(0), PolicyConfig(
+        d_model=32, ff_hidden=64, edge_layers=1, request_layers=1))
+    state = jax.tree.map(jnp.asarray, engine.init_state(cfg, 0))
+    inst = engine.round_instance(
+        engine.advance(state, DT, cfg),
+        {k: jnp.asarray(v[0]) for k, v in arr.items()}, cfg)
+    c_emb, h_emb, _ = corais_encode(plain, pstate2, inst, pcfg,
+                                    training=False)
+    with pytest.raises(ValueError, match="admit"):
+        corais_admit(plain, c_emb, h_emb, inst["edge_mask"], pcfg)
+
+
+# -- circuit breaker & retry backoff -----------------------------------------
+
+
+def test_breaker_step_cooldown_growth_and_reset():
+    res = ResilienceConfig(breaker=True, breaker_cooldown_rounds=2.0,
+                           breaker_reset_rounds=2)
+    open_until = jnp.full(2, -1.0)
+    trips = jnp.zeros(2)
+    healthy = jnp.zeros(2)
+    died = jnp.array([True, False])
+    alive = jnp.array([False, True])
+    o1, t1, h1 = breaker_step(open_until, trips, healthy, died, alive,
+                              1.0, DT, res)
+    assert float(o1[0]) == pytest.approx(1.0 + 2.0 * DT)  # first trip
+    assert float(t1[0]) == 1.0 and float(h1[0]) == 0.0
+    # second trip doubles the cooldown
+    o2, t2, _ = breaker_step(o1, t1, h1, died, alive, 2.0, DT, res)
+    assert float(o2[0]) == pytest.approx(2.0 + 4.0 * DT)
+    assert float(t2[0]) == 2.0
+    # healthy rounds past the cooldown reset the trip counter
+    ok = jnp.array([True, True])
+    o3, t3, h3 = o2, t2, jnp.zeros(2)
+    for t in (4.0, 4.25):
+        o3, t3, h3 = breaker_step(o3, t3, h3, jnp.array([False, False]),
+                                  ok, t, DT, res)
+    assert float(t3[0]) == 0.0
+
+
+def test_dispatch_mask_open_breaker_and_fallback():
+    alive = jnp.array([True, True, False])
+    open_until = jnp.array([5.0, -1.0, -1.0])
+    np.testing.assert_array_equal(dispatch_mask(alive, open_until, 1.0),
+                                  [False, True, False])
+    np.testing.assert_array_equal(dispatch_mask(alive, open_until, 6.0),
+                                  [True, True, False])
+    # every alive edge behind an open breaker -> fall back to liveness
+    all_open = jnp.array([5.0, 5.0, 5.0])
+    np.testing.assert_array_equal(dispatch_mask(alive, all_open, 1.0),
+                                  [True, True, False])
+
+
+def test_probe_cap_limits_half_open_traffic():
+    res = ResilienceConfig(breaker=True, breaker_probe=1)
+    w = jnp.asarray(np.array([[0.0, 1.0, 2.0], [1.0, 0.0, 1.0],
+                              [2.0, 1.0, 0.0]], np.float32))
+    assign = jnp.array([0, 0, 0, 1], jnp.int32)
+    req_mask = jnp.array([True, True, True, True])
+    src = jnp.array([1, 1, 2, 1], jnp.int32)
+    half_open = jnp.array([True, False, False])
+    closed = jnp.array([False, True, True])
+    out = np.asarray(probe_cap(w, assign, req_mask, src, half_open, closed,
+                               res))
+    assert out[0] == 0              # the single allowed probe
+    assert out[1] == 1 and out[2] == 2  # excess -> nearest closed to src
+    assert out[3] == 1              # closed-edge traffic untouched
+
+
+def test_breaker_keeps_recovered_edge_cold_then_reopens():
+    """Edge 0 dies for one round; with a 3-round breaker the engine must not
+    dispatch fresh work there while the breaker is open, then resume."""
+    spec = faults_lib.FaultSpec(scripted_failures=((0, 2, 3),))
+    arr = materialize_rounds(PoissonArrivals(rate=40.0, edge_skew=6.0),
+                             Q, ROUNDS, DT, seed=2)
+    ev = faults_lib.materialize_faults(spec, Q, ROUNDS, seed=2)
+    res = ResilienceConfig(breaker=True, breaker_cooldown_rounds=3.0,
+                           breaker_reset_rounds=2)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=ROUNDS,
+                              round_interval=DT,
+                              max_per_round=arr["mask"].shape[-1],
+                              resilience=res)
+    run = engine.make_rollout(cfg, engine.local_assign)
+    final, infos = run(engine.init_state(cfg, 2),
+                       faults_lib.attach_faults(arr, ev), jax.random.PRNGKey(0))
+    final, infos = jax.device_get(final), jax.device_get(infos)
+    assign = infos["assign"]  # (R, A)
+    hot = arr["mask"] & (assign == 0)
+    # round 2 applies the death (local traffic fails over), and the breaker
+    # holds through the recovery at round 3 until the cooldown lapses
+    open_rounds = range(2, 2 + 3)
+    for r in open_rounds:
+        assert not hot[r].any(), f"dispatch to open edge 0 at round {r}"
+    assert any(hot[r].any() for r in range(max(open_rounds) + 1, ROUNDS))
+    assert int(final["retried"]) > 0
+
+
+def test_retry_backoff_delays_orphan_ready():
+    res = ResilienceConfig(retry_backoff_rounds=2.0, retry_backoff_cap=3)
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=2, round_interval=DT,
+                              max_per_round=4, resilience=res)
+    cfg0 = dataclasses_replace_resilience(cfg, None)
+    state = jax.tree.map(jnp.asarray, engine.init_state(cfg, seed=0))
+    state = dict(state)
+    state["t"] = jnp.float32(DT)
+    # one committed, unfinished slot on edge 0
+    state["slot_edge"] = state["slot_edge"].at[0].set(0)
+    state["slot_src"] = state["slot_src"].at[0].set(0)
+    state["slot_ready"] = state["slot_ready"].at[0].set(0.1)
+    arr = {"alive": jnp.asarray([False, True, True, True, True]),
+           "speed": jnp.ones(Q)}
+    out = engine.apply_faults(state, arr, cfg)
+    expect = DT + engine.RETRY_EPS + 2.0 * DT  # first retry: 2 rounds
+    assert float(out["slot_ready"][0]) == pytest.approx(expect)
+    assert int(out["retried"]) == 1 and float(out["slot_retries"][0]) == 1.0
+    # without backoff the orphan is ready immediately (epsilon-nudged)
+    out0 = engine.apply_faults(state, arr, cfg0)
+    assert float(out0["slot_ready"][0]) == pytest.approx(
+        DT + engine.RETRY_EPS)
+
+
+def dataclasses_replace_resilience(cfg, res):
+    import dataclasses
+    return dataclasses.replace(cfg, resilience=res)
+
+
+# -- drop accounting ---------------------------------------------------------
+
+
+def test_overflow_drops_surface_in_summary():
+    wl = PoissonArrivals(rate=200.0)
+    arr = materialize_rounds(wl, Q, 4, DT, seed=0, max_per_round=4,
+                             overflow="clip")
+    assert arr["dropped"].sum() > 0
+    cfg = engine.EngineConfig(num_edges=Q, num_rounds=4, round_interval=DT,
+                              max_per_round=4)
+    run = engine.make_rollout(cfg, engine.local_assign)
+    final, _ = run(engine.init_state(cfg, 0), arr, jax.random.PRNGKey(0))
+    m = engine.summarize(final, slo=100.0)
+    assert m["dropped_requests"] == int(arr["dropped"].sum())
+    assert m["submitted"] == m["completed"] + m["dropped_requests"]
+    assert m["shed_rate"] > 0
+    # drops are SLO violations even when every served request is fast
+    assert m["slo_violation_frac"] == pytest.approx(
+        m["dropped_requests"] / m["submitted"])
+
+
+# -- fault-injected temporal training ----------------------------------------
+
+
+def test_temporal_train_with_admission_on_chaos_scenario():
+    """Smoke: joint dispatch+admission REINFORCE on fault-injected episodes
+    runs, logs the resilience metrics, and touches the admit head."""
+    from repro.core.train import TemporalRLConfig, temporal_train
+
+    assert scenario_fault_spec("chaos-rolling-failure").has_faults
+    pcfg = PolicyConfig(d_model=16, ff_hidden=32, edge_layers=1,
+                        request_layers=1, admit_head=True, admit_hidden=8)
+    ecfg = engine.EngineConfig(num_edges=Q, num_rounds=4, round_interval=DT,
+                               max_per_round=8)
+    cfg = TemporalRLConfig(policy=pcfg, engine=ecfg,
+                           scenario="chaos-rolling-failure", batch_size=2,
+                           lr=1e-4, seed=0, admission=True, slo=3.0,
+                           slo_penalty=2.0)
+    params0, _ = corais_init(jax.random.PRNGKey(0), pcfg)
+    params, state, _, history = temporal_train(cfg, num_batches=2)
+    assert len(history) == 2
+    for h in history:
+        assert np.isfinite(h["loss"])
+        assert "slo_violation_frac" in h and "shed" in h
+    # the admit head received gradient (params moved from its init)
+    assert "admit" in params
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         params["admit"], params0["admit"])
+    assert max(jax.tree.leaves(moved)) >= 0.0  # finite, well-formed

@@ -7,11 +7,12 @@ import pytest
 from repro.core import InstanceConfig, generate_instance
 from repro.serving import (CentralController, MultiEdgeSim, SimConfig,
                            nearest_alive_edge)
-from repro.workloads import (DiurnalArrivals, FlashCrowdArrivals,
-                             MMPPArrivals, PoissonArrivals, SizeSpec,
+from repro.workloads import (SCHEMA_V1, SCHEMA_V2, DiurnalArrivals,
+                             FaultEvent, FlashCrowdArrivals, MMPPArrivals,
+                             PoissonArrivals, SizeSpec,
                              instance_config_for_scenario, list_scenarios,
                              merge, read_trace, record_trace, scenario,
-                             scenario_spec, write_trace)
+                             scenario_fault_spec, scenario_spec, write_trace)
 
 TIMING_KEYS = ("scheduler_decision_s", "decision_mean_s", "decision_p95_s",
                "decision_max_s")
@@ -141,6 +142,52 @@ def test_read_trace_rejects_bad_schema(tmp_path):
         f.write('{"schema": "corais.trace.v999"}\n')
     with pytest.raises(ValueError, match="unsupported trace schema"):
         read_trace(path)
+
+
+def test_trace_v2_fault_events_round_trip(tmp_path):
+    """A trace with a fault timeline is stamped v2 and round-trips the
+    events exactly; without one, the file is a byte-identical v1 trace."""
+    from repro.resilience.faults import (FaultSpec, fault_events_from_rows,
+                                         materialize_faults)
+
+    path = str(tmp_path / "chaos.jsonl")
+    wl = scenario("chaos-rolling-failure")
+    ev = materialize_faults(scenario_fault_spec("chaos-rolling-failure"),
+                            5, 12, seed=0)
+    fault_events = fault_events_from_rows(ev, 0.25)
+    assert fault_events
+    record_trace(path, wl, num_edges=5, until=3.0, seed=0,
+                 fault_events=fault_events)
+    tr = read_trace(path)
+    assert tr.schema == SCHEMA_V2
+    assert tr.fault_events == fault_events  # repr floats: exact round trip
+    assert len(tr.events) > 0
+
+    # no fault events -> v1, byte-identical to a pre-v2 recording
+    p1 = str(tmp_path / "plain.jsonl")
+    record_trace(p1, wl, num_edges=5, until=3.0, seed=0)
+    tr1 = read_trace(p1)
+    assert tr1.schema == SCHEMA_V1 and tr1.fault_events == ()
+    assert '"schema": "corais.trace.v1"' in open(p1).readline()
+    assert list(tr1.events) == list(tr.events)  # same arrival stream
+
+
+def test_trace_v2_rejects_malformed_fault_events(tmp_path):
+    with pytest.raises(ValueError, match="fault kind"):
+        FaultEvent(t=0.5, kind="explode", edge=0)
+    path = str(tmp_path / "bad_events.jsonl")
+    with open(path, "w") as f:
+        f.write('{"schema": "corais.trace.v2", "num_edges": 3, '
+                '"events": [{"t": 0.5, "kind": "fail", "edge": 9}]}\n')
+    with pytest.raises(ValueError, match="edge 9"):
+        read_trace(path)
+    # v1 headers must not smuggle an events section
+    p2 = str(tmp_path / "v1_events.jsonl")
+    with open(p2, "w") as f:
+        f.write('{"schema": "corais.trace.v1", "num_edges": 3, '
+                '"events": [{"t": 0.5, "kind": "fail", "edge": 0}]}\n')
+    with pytest.raises(ValueError, match="corais.trace.v2"):
+        read_trace(p2)
 
 
 def test_read_trace_rejects_out_of_range_edge(tmp_path):
