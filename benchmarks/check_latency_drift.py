@@ -1,14 +1,23 @@
 """Guard the paper's real-time claim in CI: p95 decision-latency drift.
 
-Compares the per-(backend, Q, Z) single-decision p95 from a fresh
-``policy_latency.py`` report against the committed baseline
+Compares the per-(backend, Q, Z, stage, decode) single-decision p95 from a
+fresh ``policy_latency.py`` report against the committed baseline
 (``benchmarks/policy_latency_baseline.json``) and exits non-zero when any
 cell regressed beyond ``--factor`` (default 4x, with a ``--floor-ms``
 absolute floor so microsecond-level cells don't trip on scheduler noise).
 The generous factor absorbs machine-to-machine variance — the check is a
 drift tripwire for order-of-magnitude regressions (an accidentally
-un-jitted path, a fused kernel falling back to per-request Python), not a
-microbenchmark.
+un-jitted path, a fused kernel falling back to per-request Python, the
+fused decode silently materializing (Z, Q) again), not a microbenchmark.
+
+Reads both report schemas: corais.policy_latency.v1 cells (no stage/decode
+fields) key as (backend, Q, Z, "decision", "host"), so a v2 report checks
+cleanly against a v1 baseline and vice versa.
+
+``--slo-report results/slo_report.json`` additionally prints the fast-path
+SLO pass/fail table (informational: SLO targets are machine-dependent wall
+clocks, so the table is surfaced as a CI artifact rather than a gate; the
+gate is the drift factor above).
 
 Run:  PYTHONPATH=src python benchmarks/policy_latency.py --smoke
       PYTHONPATH=src python benchmarks/check_latency_drift.py
@@ -25,19 +34,24 @@ import json
 import os
 import sys
 
-BASELINE_SCHEMA = "corais.policy_latency_baseline.v1"
+BASELINE_SCHEMA = "corais.policy_latency_baseline.v2"
+#: accepted on read; v1 cells default stage=decision, decode=host
+LEGACY_BASELINE_SCHEMAS = ("corais.policy_latency_baseline.v1",)
 HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_REPORT = os.path.join(HERE, "..", "results", "policy_latency.json")
 DEFAULT_BASELINE = os.path.join(HERE, "policy_latency_baseline.json")
+DEFAULT_SLO_REPORT = os.path.join(HERE, "..", "results", "slo_report.json")
 
 
 def _cell_key(cell: dict) -> tuple:
     return (cell["backend"], int(cell["num_edges"]),
-            int(cell["num_requests"]))
+            int(cell["num_requests"]), cell.get("stage", "decision"),
+            cell.get("decode", "host"))
 
 
 def load_report_cells(path: str) -> dict:
-    """{(backend, Q, Z): p95_ms} from a corais.policy_latency.v1 report."""
+    """{(backend, Q, Z, stage, decode): p95_ms} from a policy_latency
+    report (v1 or v2)."""
     with open(path) as f:
         report = json.load(f)
     return {_cell_key(c): float(c["single"]["p95_ms"])
@@ -50,8 +64,8 @@ def write_baseline(report_path: str, baseline_path: str) -> None:
         "schema": BASELINE_SCHEMA,
         "source_report": os.path.basename(report_path),
         "cells": [{"backend": b, "num_edges": q, "num_requests": z,
-                   "p95_ms": p95}
-                  for (b, q, z), p95 in sorted(cells.items())],
+                   "stage": stage, "decode": decode, "p95_ms": p95}
+                  for (b, q, z, stage, decode), p95 in sorted(cells.items())],
     }
     with open(baseline_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -60,19 +74,36 @@ def write_baseline(report_path: str, baseline_path: str) -> None:
           f"({len(cells)} cells)")
 
 
+def print_slo_table(slo_path: str) -> None:
+    """Informational fast-path SLO table from a corais.slo_report.v1 file."""
+    with open(slo_path) as f:
+        report = json.load(f)
+    print(f"fast-path SLO table ({slo_path}):")
+    for p in report["paths"]:
+        mark = "PASS" if p["pass"] else "FAIL"
+        print(f"  {p['name']:22s} "
+              f"p50={p['p50_ms']:8.3f}/{p['p50_slo_ms']:g}ms "
+              f"p95={p['p95_ms']:8.3f}/{p['p95_slo_ms']:g}ms "
+              f"p99={p['p99_ms']:8.3f}/{p['p99_slo_ms']:g}ms  {mark}")
+    overall = "PASS" if report.get("pass") else "FAIL"
+    print(f"  overall: {overall} (informational — not a CI gate)")
+
+
 def check(report_path: str, baseline_path: str, *, factor: float,
           floor_ms: float) -> int:
     with open(baseline_path) as f:
         baseline = json.load(f)
-    if baseline.get("schema") != BASELINE_SCHEMA:
-        print(f"error: {baseline_path} is not a {BASELINE_SCHEMA} file")
+    schema = baseline.get("schema")
+    if schema != BASELINE_SCHEMA and schema not in LEGACY_BASELINE_SCHEMAS:
+        print(f"error: {baseline_path} is not a {BASELINE_SCHEMA} file "
+              f"(or legacy {', '.join(LEGACY_BASELINE_SCHEMAS)})")
         return 2
     base = {_cell_key(c): float(c["p95_ms"]) for c in baseline["cells"]}
     current = load_report_cells(report_path)
     common = sorted(set(base) & set(current))
     if not common:
-        print("error: no overlapping (backend, Q, Z) cells between report "
-              "and baseline — regenerate one of them")
+        print("error: no overlapping (backend, Q, Z, stage, decode) cells "
+              "between report and baseline — regenerate one of them")
         return 2
 
     failures = []
@@ -81,12 +112,14 @@ def check(report_path: str, baseline_path: str, *, factor: float,
         status = "ok" if current[key] <= limit else "DRIFT"
         if status == "DRIFT":
             failures.append(key)
-        b, q, z = key
-        print(f"  {b:7s} Q={q:4d} Z={z:5d} p95={current[key]:8.3f}ms "
-              f"baseline={base[key]:8.3f}ms limit={limit:8.3f}ms {status}")
+        b, q, z, stage, decode = key
+        print(f"  {b:7s} {stage:8s} {decode:5s} Q={q:4d} Z={z:5d} "
+              f"p95={current[key]:8.3f}ms baseline={base[key]:8.3f}ms "
+              f"limit={limit:8.3f}ms {status}")
     skipped = sorted(set(current) - set(base))
-    for b, q, z in skipped:
-        print(f"  {b:7s} Q={q:4d} Z={z:5d} (no baseline cell, skipped)")
+    for b, q, z, stage, decode in skipped:
+        print(f"  {b:7s} {stage:8s} {decode:5s} Q={q:4d} Z={z:5d} "
+              f"(no baseline cell, skipped)")
     if failures:
         print(f"FAIL: {len(failures)}/{len(common)} cells regressed beyond "
               f"{factor:.1f}x baseline (floor {floor_ms:.1f}ms)")
@@ -107,11 +140,17 @@ def main() -> None:
                     help="cells under this absolute p95 never fail")
     ap.add_argument("--write-baseline", action="store_true",
                     help="distill --report into --baseline and exit")
+    ap.add_argument("--slo-report", nargs="?", const=DEFAULT_SLO_REPORT,
+                    default=None,
+                    help="also print the fast-path SLO table from this "
+                         "slo_report.json (informational)")
     args = ap.parse_args()
 
     if args.write_baseline:
         write_baseline(args.report, args.baseline)
         return
+    if args.slo_report and os.path.exists(args.slo_report):
+        print_slo_table(args.slo_report)
     sys.exit(check(args.report, args.baseline, factor=args.factor,
                    floor_ms=args.floor_ms))
 

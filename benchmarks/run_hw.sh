@@ -1,0 +1,64 @@
+#!/bin/bash
+# Hardware-tuned launcher for the latency/throughput benchmarks.
+#
+# Reproducible wall-clock numbers need a pinned allocator and XLA host
+# configuration, not just a jitted function: glibc malloc fragments under
+# jax's large transient buffers (tcmalloc keeps p99 flat), XLA's host
+# platform defaults to one device regardless of cores, and TF's C++ logging
+# can dominate microsecond-scale timing loops. This wrapper pins all three,
+# then dispatches to a benchmark module.
+#
+# Usage:
+#   benchmarks/run_hw.sh policy_latency [args...]
+#   benchmarks/run_hw.sh policy_latency --smoke --fastpath
+#   benchmarks/run_hw.sh rollout_throughput [args...]
+#   HOST_DEVICES=4 benchmarks/run_hw.sh policy_latency ...
+set -euo pipefail
+
+HERE="$(cd "$(dirname "$0")" && pwd)"
+REPO="$(dirname "$HERE")"
+
+if [ $# -lt 1 ]; then
+  echo "usage: $0 <benchmark-module> [args...]" >&2
+  echo "  e.g.: $0 policy_latency --smoke --fastpath" >&2
+  exit 2
+fi
+BENCH="$1"
+shift
+if [ ! -f "$HERE/$BENCH.py" ]; then
+  echo "error: unknown benchmark '$BENCH' (no $HERE/$BENCH.py)" >&2
+  exit 2
+fi
+
+# tcmalloc: flat allocation latency under repeated large activations; the
+# report threshold silences its large-alloc warnings inside timing loops.
+# Gate on presence — the stock image may not ship it.
+for so in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+          /usr/lib/libtcmalloc.so.4 \
+          /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+  if [ -f "$so" ]; then
+    export LD_PRELOAD="$so${LD_PRELOAD:+:$LD_PRELOAD}"
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+    break
+  fi
+done
+if [ -z "${LD_PRELOAD:-}" ]; then
+  echo "note: tcmalloc not found, running with glibc malloc" >&2
+fi
+
+# quiet the C++ backend: stray WARNING lines serialize stderr inside the
+# timed region on some platforms
+export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}
+
+# deterministic f32 default sizes for every benchmark artifact
+export JAX_DEFAULT_DTYPE_BITS=${JAX_DEFAULT_DTYPE_BITS:-32}
+
+# multi-device host benchmarking (rollout sharding experiments): expose N
+# virtual host devices. Must be set before jax initializes — which is why
+# this lives in the launcher, not the benchmark.
+if [ -n "${HOST_DEVICES:-}" ]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=${HOST_DEVICES} ${XLA_FLAGS:-}"
+fi
+
+export PYTHONPATH="$REPO/src${PYTHONPATH:+:$PYTHONPATH}"
+exec python "$HERE/$BENCH.py" "$@"

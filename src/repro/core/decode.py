@@ -36,6 +36,28 @@ def sampling_decode(key, inst, log_probs, num_samples: int):
     return samples[best], costs[best]
 
 
+def topk_sampling_decode(key, inst, top_idx, top_lp, num_samples: int):
+    """Best-of-n sampling from a (Z, K) candidate set instead of the dense
+    (Z, Q) matrix: per-sample cost is O(Z*K).
+
+    ``top_idx`` / ``top_lp``: per-request top-k edges and their log-probs
+    (kernel or ``lax.top_k`` output; ``jax.random.categorical``
+    renormalizes, so with K = Q this draws from exactly the same
+    distribution as :func:`sampling_decode`). The greedy decision
+    (``top_idx[..., 0]``) is always included as a candidate, matching
+    :func:`sampling_decode`. Returns (best_assignment, best_makespan)."""
+    slots = jax.random.categorical(
+        key, top_lp[None, :, :], axis=-1,
+        shape=(num_samples,) + top_lp.shape[:-1])          # (S, Z) in [0, K)
+    samples = jnp.take_along_axis(top_idx[None, :, :], slots[..., None],
+                                  axis=-1)[..., 0]         # (S, Z) edges
+    samples = jnp.concatenate([top_idx[None, :, 0], samples], axis=0)
+    samples = samples.astype(jnp.int32)
+    costs = jax.vmap(lambda a: makespan(inst, a))(samples)
+    best = jnp.argmin(costs)
+    return samples[best], costs[best]
+
+
 def assignment_log_prob(log_probs, assign, req_mask) -> jax.Array:
     """log p(pi) = sum_z log a_{x_z, z} over real requests.
 

@@ -3,19 +3,36 @@
 Every consumer of the trained policy — the batched rollout engine, the
 event-driven serving controller, and the evaluation harness — makes a
 scheduling decision the same way: one mask-invariant, fixed-shape forward
-(:func:`repro.core.policy.corais_encode` + :func:`corais_score`) followed
-by a decode (greedy argmax or best-of-n sampling). This module is that
-single path; nothing outside it re-implements "forward + decode".
+(:func:`repro.core.policy.corais_encode` + the eq 16-17 head) followed by a
+decode (greedy argmax or best-of-n sampling). This module is that single
+path; nothing outside it re-implements "forward + decode".
+
+Two decode routes through the head:
+
+    materialized (``fused_decode=False``) — :func:`corais_score` emits the
+        full (Z, Q) log-prob matrix; greedy argmaxes it, sampled dispatch
+        takes ``lax.top_k`` of it. The training path (REINFORCE needs the
+        matrix) and the parity oracle.
+    fused (``fused_decode=True``) — :func:`corais_score_decode` performs
+        argmax/top-k inside the scoring kernel, so the decision path never
+        materializes (Z, Q); the kernel emits per-request (edge, value)
+        pairs directly. The serving fast path (see serving/fastpath.py).
+
+Sampled dispatch draws from a (Z, K) candidate set either way — per-sample
+cost O(Z*K), not O(Z*Q) — and with ``num_candidates=None`` (K = Q) the
+sampling distribution is exactly the paper's eq 19 factorized policy.
 
 Three entry points, one semantics:
 
     policy_decide     — pure function, safe under jit/vmap/scan (the
                         engine's per-round scheduler body)
     make_policy_assign— closure matching the engine's AssignFn signature
-                        (registered as ``ASSIGN_FNS["policy"]``)
+                        (registered as ``ASSIGN_FNS["policy"]``; the
+                        ``"policy-fused"`` entry defaults fused_decode on)
     make_decision_fn  — jitted host-side decision function for the
-                        controller / latency benchmarks (fixed padded
-                        shapes, compile once, reuse every round)
+                        controller / fast path / latency benchmarks (fixed
+                        padded shapes, compile once, reuse every round;
+                        ``donate=True`` donates the instance buffers)
 """
 from __future__ import annotations
 
@@ -24,21 +41,37 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.decode import greedy_decode, sampling_decode
+from repro.core.decode import (greedy_decode, sampling_decode,
+                               topk_sampling_decode)
 from repro.core.policy import (PolicyConfig, corais_admit, corais_encode,
-                               corais_score)
+                               corais_score, corais_score_decode)
 
 DECODE_MODES = ("greedy", "sample")
+
+__all__ = ["DECODE_MODES", "policy_decide", "make_policy_assign",
+           "make_policy_assign_fused", "make_decision_fn",
+           "sampling_decode"]
 
 
 def policy_decide(key, params, policy_state, inst, cfg: PolicyConfig, *,
                   mode: str = "greedy", num_samples: int = 64,
                   backend: Optional[str] = None,
-                  admission: bool = False):
+                  admission: bool = False,
+                  fused_decode: bool = False,
+                  num_candidates: Optional[int] = None,
+                  normalize: bool = True):
     """One full scheduling decision on a frozen instance: (Z,) int32
     execution edge per request. ``mode="greedy"`` ignores ``key``;
-    ``mode="sample"`` draws ``num_samples`` complete decisions and keeps
-    the cheapest (eq 19), greedy included as a candidate.
+    ``mode="sample"`` draws ``num_samples`` complete decisions from the
+    per-request top-``num_candidates`` candidate set and keeps the
+    cheapest (eq 19), greedy included as a candidate
+    (``num_candidates=None`` keeps every edge, i.e. the exact eq-19
+    distribution; a small K truncates the tail for O(Z*K) sampling).
+
+    ``fused_decode=True`` decodes inside the scoring kernel — the (Z, Q)
+    log-prob matrix is never materialized. ``normalize=False`` (greedy
+    only) additionally skips the log-softmax normalizer: identical edge
+    choice, cheapest serving path.
 
     With ``admission=True`` (requires a policy built with
     ``admit_head=True``) the same encoder pass also thresholds the
@@ -49,23 +82,43 @@ def policy_decide(key, params, policy_state, inst, cfg: PolicyConfig, *,
                          f"supported: {', '.join(DECODE_MODES)}")
     c_emb, h_emb, _ = corais_encode(params, policy_state, inst, cfg,
                                     training=False)
-    log_probs = corais_score(params, c_emb, h_emb, inst["edge_mask"], cfg,
-                             backend=backend)
+    emask = inst["edge_mask"]
     if mode == "greedy":
-        assign = greedy_decode(log_probs)
+        if fused_decode:
+            ti, _ = corais_score_decode(params, c_emb, h_emb, emask, cfg,
+                                        k=1, normalize=normalize,
+                                        backend=backend)
+            assign = ti[..., 0]
+        else:
+            log_probs = corais_score(params, c_emb, h_emb, emask, cfg,
+                                     backend=backend)
+            assign = greedy_decode(log_probs)
     else:
-        assign, _ = sampling_decode(key, inst, log_probs, num_samples)
-        assign = assign.astype(jnp.int32)
+        k = num_candidates or emask.shape[-1]
+        if fused_decode:
+            ti, tv = corais_score_decode(params, c_emb, h_emb, emask, cfg,
+                                         k=k, normalize=True,
+                                         backend=backend)
+        else:
+            log_probs = corais_score(params, c_emb, h_emb, emask, cfg,
+                                     backend=backend)
+            tv, ti = jax.lax.top_k(log_probs, k)
+        assign, _ = topk_sampling_decode(key, inst, ti.astype(jnp.int32),
+                                         tv, num_samples)
+    assign = assign.astype(jnp.int32)
     if not admission:
         return assign
-    admit = corais_admit(params, c_emb, h_emb, inst["edge_mask"], cfg) > 0
+    admit = corais_admit(params, c_emb, h_emb, emask, cfg) > 0
     return assign, admit & inst["req_mask"]
 
 
 def make_policy_assign(params, policy_state, policy_cfg: PolicyConfig,
                        mode: str = "greedy", num_samples: int = 64,
                        backend: Optional[str] = None,
-                       admission: bool = False):
+                       admission: bool = False,
+                       fused_decode: bool = False,
+                       num_candidates: Optional[int] = None,
+                       normalize: bool = True):
     """The CoRaiS policy as an engine scheduler: AssignFn(key, inst).
 
     The closure stays un-jitted so the engine can trace it inside its own
@@ -76,7 +129,10 @@ def make_policy_assign(params, policy_state, policy_cfg: PolicyConfig,
     def fn(key, inst):
         return policy_decide(key, params, policy_state, inst, policy_cfg,
                              mode=mode, num_samples=num_samples,
-                             backend=backend, admission=admission)
+                             backend=backend, admission=admission,
+                             fused_decode=fused_decode,
+                             num_candidates=num_candidates,
+                             normalize=normalize)
 
     return fn
 
@@ -86,17 +142,38 @@ def make_policy_assign(params, policy_state, policy_cfg: PolicyConfig,
 make_policy_assign._assign_factory = True
 
 
+def make_policy_assign_fused(params, policy_state, policy_cfg: PolicyConfig,
+                             **kwargs):
+    """``make_policy_assign`` with the fused in-kernel decode on by default
+    (the engine's ``ASSIGN_FNS["policy-fused"]`` entry)."""
+    kwargs.setdefault("fused_decode", True)
+    return make_policy_assign(params, policy_state, policy_cfg, **kwargs)
+
+
+make_policy_assign_fused._assign_factory = True
+
+
 def make_decision_fn(params, policy_state, cfg: PolicyConfig, *,
                      mode: str = "greedy", num_samples: int = 64,
-                     backend: Optional[str] = None):
+                     backend: Optional[str] = None,
+                     fused_decode: bool = False,
+                     num_candidates: Optional[int] = None,
+                     normalize: bool = True,
+                     donate: bool = False):
     """Compile-once decision function ``decide(inst, key) -> (Z,) int32``
     for the real-time serving path: pad snapshots to a constant shape and
-    every round after the first runs at kernel latency."""
+    every round after the first runs at kernel latency.
 
-    @jax.jit
+    ``donate=True`` donates the instance buffers to the call (the fast
+    path's double-buffered loop re-stages fresh device buffers each round,
+    so XLA can reuse the memory in place; unsupported-donation backends
+    like CPU just warn and copy)."""
+
     def decide(inst, key):
         return policy_decide(key, params, policy_state, inst, cfg,
                              mode=mode, num_samples=num_samples,
-                             backend=backend)
+                             backend=backend, fused_decode=fused_decode,
+                             num_candidates=num_candidates,
+                             normalize=normalize)
 
-    return decide
+    return jax.jit(decide, donate_argnums=(0,) if donate else ())

@@ -332,6 +332,72 @@ def corais_score(params, c_emb, h_emb, edge_mask, cfg: PolicyConfig, *,
               cfg.tanh_clip)
 
 
+# ---------------------------------------------------------------------------
+# fused decode head: score + argmax/top-k without materializing (Z, Q)
+# ---------------------------------------------------------------------------
+
+
+def _decode_xla(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip, k, normalize):
+    from repro.kernels import ref
+    return ref.policy_score_decode_xla(c_emb, h_emb, w_px, w_py, edge_mask,
+                                       tanh_clip, k, normalize)
+
+
+def _decode_ref(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip, k, normalize):
+    from repro.kernels import ref
+    if c_emb.ndim == 2:
+        return ref.policy_score_decode_ref(c_emb, h_emb, w_px, w_py,
+                                           edge_mask, tanh_clip, k, normalize)
+    batch = c_emb.shape[:-2]
+    q = c_emb.shape[-2]
+    cf = c_emb.reshape((-1,) + c_emb.shape[-2:])
+    hf = h_emb.reshape((-1,) + h_emb.shape[-2:])
+    mf = jnp.broadcast_to(edge_mask, batch + (q,)).reshape((-1, q))
+    ti, tv = jax.vmap(
+        lambda c, h, m: ref.policy_score_decode_ref(c, h, w_px, w_py, m,
+                                                    tanh_clip, k, normalize)
+    )(cf, hf, mf)
+    return (ti.reshape(batch + ti.shape[-2:]),
+            tv.reshape(batch + tv.shape[-2:]))
+
+
+def _decode_pallas(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip, k,
+                   normalize):
+    from repro.kernels import ops
+    return ops.policy_score_decode(c_emb, h_emb, w_px, w_py, edge_mask,
+                                   tanh_clip=tanh_clip, k=k,
+                                   normalize=normalize)
+
+
+#: name -> fn(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip, k, normalize)
+#: -> ((..., Z, K) int32 top edges, (..., Z, K) float32 values)
+DECODE_BACKENDS: dict[str, Callable] = {
+    "xla": _decode_xla,        # materialized head + lax.top_k (kernels/ref.py)
+    "ref": _decode_ref,        # per-instance argsort oracle (kernels/ref.py)
+    "pallas": _decode_pallas,  # fused kernel, (Z, Q) never leaves VMEM
+}
+
+
+def corais_score_decode(params, c_emb, h_emb, edge_mask, cfg: PolicyConfig,
+                        *, k: int = 1, normalize: bool = True,
+                        backend: str | None = None):
+    """Fused eq 16-17 head + decode on encoder outputs: per-request top-k
+    edges as ``(top_idx, top_val)``, both (..., Z, K). ``top_idx[..., 0]``
+    is the greedy decision; with ``normalize=True`` values are eq-17
+    log-probs, otherwise the clipped eq-16 compatibilities (same ranking,
+    no normalizer — the serving fast path). Backend resolution mirrors
+    :func:`corais_score` over :data:`DECODE_BACKENDS`."""
+    name = backend or cfg.score_backend
+    try:
+        fn = DECODE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown decode backend {name!r}; registered: "
+            f"{', '.join(sorted(DECODE_BACKENDS))}") from None
+    return fn(c_emb, h_emb, params["w_px"], params["w_py"], edge_mask,
+              cfg.tanh_clip, k, normalize)
+
+
 def corais_admit(params, c_emb, h_emb, edge_mask, cfg: PolicyConfig):
     """Admission-head logits on encoder outputs: (..., Z) per-request
     admit/shed scores (sigmoid -> admit probability; > 0 -> admit under

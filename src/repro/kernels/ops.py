@@ -15,7 +15,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.mamba_scan import mamba_scan_fwd
-from repro.kernels.policy_score import policy_score_fwd
+from repro.kernels.policy_score import (policy_score_decode_fwd,
+                                        policy_score_fwd)
 
 def interpret_mode() -> bool:
     """Lazy: avoids initializing the jax backend at import time (the dry-run
@@ -48,5 +49,19 @@ def policy_score(c_emb, h_emb, w_px, w_py, edge_mask, *, tanh_clip=10.0, bz=256)
                             tanh_clip=tanh_clip, bz=bz, interpret=interpret_mode())
 
 
+@partial(jax.jit, static_argnames=("tanh_clip", "k", "normalize", "bz"))
+def policy_score_decode(c_emb, h_emb, w_px, w_py, edge_mask, *,
+                        tanh_clip=10.0, k=1, normalize=True, bz=1024):
+    """Fused score + greedy/top-k decode: (top_idx, top_val), (..., Z, K).
+
+    Never materializes the (Z, Q) log-prob matrix — the sweep block lives
+    in VMEM and only K entries per request come back. The default ``bz``
+    covers Z <= 1024 in a single sweep."""
+    return policy_score_decode_fwd(c_emb, h_emb, w_px, w_py, edge_mask,
+                                   tanh_clip=tanh_clip, k=k,
+                                   normalize=normalize, bz=bz,
+                                   interpret=interpret_mode())
+
+
 __all__ = ["flash_attention", "decode_attention", "mamba_scan",
-           "policy_score", "ref", "interpret_mode"]
+           "policy_score", "policy_score_decode", "ref", "interpret_mode"]

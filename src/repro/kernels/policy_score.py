@@ -20,6 +20,23 @@ matrix flash-attention-style instead of saving it.
 Neither kernel body reads ``pl.program_id``: all indexing lives in the
 BlockSpec index maps, which keeps the kernels correct under ``vmap``'s
 pallas batching rule (it prepends a fresh grid dimension).
+
+The *fused decode* variant (:func:`policy_score_decode_fwd`) goes one step
+further for the real-time serving path: greedy argmax and top-k candidate
+selection happen inside the kernel, so a decision never materializes the
+(Z, Q) log-prob matrix — per Z-block the compatibility tile lives only in
+VMEM and the kernel emits ``(edge_index, value)`` pairs (a ``(Z, K)``
+candidate set for sampled dispatch). Two algebraic optimizations make it
+cheaper than score-then-argmax even before the HBM traffic is counted:
+
+  * the request projection is folded into the edge side —
+    ``u = h @ (w_py @ (c @ w_px)^T)`` — turning the (Z, d) x (d, d)
+    projection into a (d, Q) one (Q << Z on every paper scale), and
+  * with ``normalize=False`` the selection runs in u-space (``tanh`` is
+    monotone, so argmax/top-k commute with it) and ``tanh`` is applied to
+    the K selected values only, skipping the (Z, Q) transcendental sweep
+    and the log-softmax normalizer entirely. ``normalize=True`` keeps the
+    eq-17 semantics and emits true log-probabilities.
 """
 from __future__ import annotations
 
@@ -158,6 +175,98 @@ def _policy_score_bwd(tanh_clip, bz, interpret, res, g):
 
 
 _policy_score.defvjp(_policy_score_fwd, _policy_score_bwd)
+
+
+def _decode_kernel(c_ref, h_ref, wpx_ref, wpy_ref, mask_ref, ti_ref, tv_ref,
+                   *, scale: float, tanh_clip: float, k: int,
+                   normalize: bool):
+    cc = c_ref[0].astype(jnp.float32)                        # (Q, d)
+    hh = h_ref[0].astype(jnp.float32)                        # (bz, d)
+    px = jax.lax.dot(cc, wpx_ref[...].astype(jnp.float32))   # (Q, d)
+    # fold the request projection into the edge side: (d, Q), so the big
+    # matmul is the only one that touches the Z axis
+    pxy = jax.lax.dot(wpy_ref[...].astype(jnp.float32), px.T)
+    u = jax.lax.dot(hh, pxy) * scale                         # (bz, Q)
+    keep = mask_ref[0][None, :] > 0.5
+    qn = u.shape[1]
+    ids = jax.lax.broadcasted_iota(jnp.int32, u.shape, 1)
+    if normalize:
+        sel = jnp.where(keep, tanh_clip * jnp.tanh(u), -1e9)
+        m = jnp.max(sel, axis=1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(sel - m), axis=1, keepdims=True)) + m
+    else:
+        # tanh is monotone: select in u-space, clip only the winners
+        sel = jnp.where(keep, u, -jnp.inf)
+    idxs, vals = [], []
+    cur = sel
+    for j in range(k):  # k is static and small: unrolled running top-k
+        mj = jnp.max(cur, axis=1)
+        # first index attaining the max (jnp.argmax tie rule)
+        ij = jnp.min(jnp.where(cur == mj[:, None], ids, qn), axis=1)
+        idxs.append(ij)
+        vals.append(mj)
+        if j + 1 < k:
+            cur = jnp.where(ids == ij[:, None], -jnp.inf, cur)
+    ti = jnp.stack(idxs, axis=1)                             # (bz, K)
+    tv = jnp.stack(vals, axis=1)
+    tv = tv - lse if normalize else tanh_clip * jnp.tanh(tv)
+    ti_ref[0] = ti.astype(jnp.int32)
+    tv_ref[0] = tv.astype(jnp.float32)
+
+
+def policy_score_decode_fwd(c_emb, h_emb, w_px, w_py, edge_mask, *,
+                            tanh_clip: float = 10.0, k: int = 1,
+                            normalize: bool = True, bz: int = 1024,
+                            interpret: bool = False):
+    """Fused score + decode: per-request top-k edges without ever writing
+    the (Z, Q) log-prob matrix to HBM.
+
+    Same input contract as :func:`policy_score_fwd`; returns
+    ``(top_idx, top_val)`` of shape (..., Z, K) — ``top_idx[..., 0]`` is
+    the greedy decision. With ``normalize=True`` the values are true
+    eq-17 log-probabilities; with ``normalize=False`` they are the clipped
+    compatibilities (eq 16) of the selected edges — the edge ranking is
+    identical (softmax and tanh are monotone), which is the serving fast
+    path: a dispatch decision needs the index, not the normalizer.
+    Candidate slots beyond the number of unmasked edges are undefined —
+    keep ``k`` at or below the valid-edge count. Not differentiable (and
+    doesn't need to be: training scores, serving decodes)."""
+    batch_shape = c_emb.shape[:-2]
+    q, d = c_emb.shape[-2:]
+    z = h_emb.shape[-2]
+    c3 = c_emb.reshape((-1, q, d))
+    h3 = h_emb.reshape((-1, z, d))
+    maskf = jnp.broadcast_to(edge_mask, batch_shape + (q,))
+    maskf = maskf.reshape((-1, q)).astype(jnp.float32)
+    b = c3.shape[0]
+    bz = min(bz, z)
+    hp = _pad_z(h3, bz)
+    nz = hp.shape[1] // bz
+    kernel = functools.partial(_decode_kernel, scale=1.0 / math.sqrt(d),
+                               tanh_clip=tanh_clip, k=k, normalize=normalize)
+    ti, tv = pl.pallas_call(
+        kernel,
+        grid=(b, nz),
+        in_specs=[
+            pl.BlockSpec((1, q, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bz, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((d, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((d, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, q), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bz, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bz, k), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hp.shape[1], k), jnp.int32),
+            jax.ShapeDtypeStruct((b, hp.shape[1], k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c3, hp, w_px, w_py, maskf)
+    ti = ti[:, :z].reshape(batch_shape + (z, k))
+    tv = tv[:, :z].reshape(batch_shape + (z, k))
+    return ti, tv
 
 
 def policy_score_fwd(c_emb, h_emb, w_px, w_py, edge_mask, *,

@@ -92,3 +92,40 @@ def policy_score_xla(c_emb, h_emb, w_px, w_py, edge_mask, tanh_clip=10.0):
     imp = tanh_clip * jnp.tanh(u)  # eq (16)
     imp = jnp.where(edge_mask[..., None, :], imp, -1e9)
     return jax.nn.log_softmax(imp, axis=-1)  # eq (17): softmax over edges
+
+
+def policy_score_decode_ref(c_emb, h_emb, w_px, w_py, edge_mask,
+                            tanh_clip=10.0, k=1, normalize=True):
+    """Per-instance decode oracle: materialize the (Z, Q) matrix and sort.
+
+    c_emb: (Q, d); h_emb: (Z, d); returns (top_idx, top_val), both (Z, K)
+    — lowest-index-first on ties (the jnp.argmax / lax.top_k rule), so the
+    fused kernel can be pinned against it exactly. ``normalize=False``
+    returns the clipped compatibilities (eq 16) instead of log-probs."""
+    d = c_emb.shape[-1]
+    px = c_emb.astype(jnp.float32) @ w_px.astype(jnp.float32)
+    py = h_emb.astype(jnp.float32) @ w_py.astype(jnp.float32)
+    u = (py @ px.T) / math.sqrt(d)  # (Z, Q)
+    imp = jnp.where(edge_mask[None, :], tanh_clip * jnp.tanh(u), -1e9)
+    # stable argsort of -imp == top-k with ties broken toward lower index
+    top_idx = jnp.argsort(-imp, axis=-1)[..., :k].astype(jnp.int32)
+    top_val = jnp.take_along_axis(imp, top_idx, axis=-1)
+    if normalize:
+        top_val = top_val - jax.nn.logsumexp(imp, axis=-1, keepdims=True)
+    return top_idx, top_val
+
+
+def policy_score_decode_xla(c_emb, h_emb, w_px, w_py, edge_mask,
+                            tanh_clip=10.0, k=1, normalize=True):
+    """Batched plain-XLA decode: ``lax.top_k`` over the materialized head,
+    any leading batch shape — the drop-in comparison path for the fused
+    decode kernel (same (top_idx, top_val) contract, (..., Z, K))."""
+    d = c_emb.shape[-1]
+    px = c_emb @ w_px
+    py = h_emb @ w_py
+    u = jnp.einsum("...zd,...qd->...zq", py, px) / math.sqrt(d)
+    imp = jnp.where(edge_mask[..., None, :], tanh_clip * jnp.tanh(u), -1e9)
+    top_val, top_idx = jax.lax.top_k(imp, k)
+    if normalize:
+        top_val = top_val - jax.nn.logsumexp(imp, axis=-1, keepdims=True)
+    return top_idx.astype(jnp.int32), top_val

@@ -5,10 +5,14 @@ from repro.serving.engine import (ASSIGN_FNS, EngineConfig, greedy_assign,
                                   init_batch, init_state, local_assign,
                                   make_policy_assign, make_rollout,
                                   resolve_assign_fn, step_round, summarize)
+from repro.serving.fastpath import (DEFAULT_BUCKETS, DecisionFastPath,
+                                    SLOSpec, evaluate_slo, pad_instance)
 from repro.serving.topology import nearest_alive_edge
 
 __all__ = ["CentralController", "SchedulerChoice", "MultiEdgeSim", "SimConfig",
            "SimEdge", "nearest_alive_edge",
            "EngineConfig", "init_state", "init_batch", "step_round",
            "make_rollout", "summarize", "local_assign", "greedy_assign",
-           "make_policy_assign", "ASSIGN_FNS", "resolve_assign_fn"]
+           "make_policy_assign", "ASSIGN_FNS", "resolve_assign_fn",
+           "DecisionFastPath", "SLOSpec", "DEFAULT_BUCKETS", "evaluate_slo",
+           "pad_instance"]

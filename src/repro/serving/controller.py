@@ -1,10 +1,14 @@
 """Central controller (paper Fig. 2): snapshot -> schedule -> dispatch.
 
-Scheduling backends: the trained CoRaiS policy (greedy or sampling decode),
-the heuristics (local / random / greedy insertion), or the ILS reference.
-The controller is scheduler-agnostic: every backend consumes the same
-frozen instance produced by core.state.snapshot_instance, so swapping the
-paper's learned scheduler against baselines is a one-line config change.
+Scheduling backends: the trained CoRaiS policy (greedy or sampling decode,
+optionally with the fused in-kernel decode — ``fused_decode=True`` — which
+never materializes the per-round (Z, Q) log-prob matrix), the heuristics
+(local / random / greedy insertion), or the ILS reference. The controller
+is scheduler-agnostic: every backend consumes the same frozen instance
+produced by core.state.snapshot_instance, so swapping the paper's learned
+scheduler against baselines is a one-line config change. For the
+latency-bound serving loop proper, see :mod:`repro.serving.fastpath`
+(bucketed compile-once decisions, double-buffered staging, SLO checks).
 """
 from __future__ import annotations
 
@@ -36,6 +40,11 @@ class CentralController:
     # pad snapshots so the jitted policy sees a constant shape
     q_pad: int = 0
     z_pad: int = 64
+    # decode inside the scoring kernel (never materialize (Z, Q)); with
+    # sampling, draw from the kernel's top-``num_candidates`` set
+    # (None: all edges — exact eq-19 distribution)
+    fused_decode: bool = False
+    num_candidates: Optional[int] = None
 
     def __post_init__(self):
         self._key = jax.random.PRNGKey(self.seed)
@@ -49,7 +58,9 @@ class CentralController:
             mode = "sample" if self.scheduler == "corais-sample" else "greedy"
             self._decide = make_decision_fn(
                 self.policy_params, self.policy_state, self.policy_cfg,
-                mode=mode, num_samples=self.sample_n)
+                mode=mode, num_samples=self.sample_n,
+                fused_decode=self.fused_decode,
+                num_candidates=self.num_candidates)
         jinst = jax.tree.map(jnp.asarray, inst)
         self._key, sub = jax.random.split(self._key)
         assign = self._decide(jinst, sub)

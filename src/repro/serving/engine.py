@@ -66,7 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.inference import make_policy_assign
+from repro.core.inference import make_policy_assign, make_policy_assign_fused
 from repro.core.objective import makespan
 from repro.core.state import slot_workload_features
 from repro.resilience.policies import (ResilienceConfig, admission_mask,
@@ -575,11 +575,15 @@ def greedy_assign(key, inst):
 
 #: Engine scheduling backends, selectable by name. Plain entries are
 #: AssignFns; entries tagged ``_assign_factory`` (the policy) are built
-#: with policy kwargs through :func:`resolve_assign_fn`.
+#: with policy kwargs through :func:`resolve_assign_fn`. ``"policy-fused"``
+#: is the policy with the in-kernel fused decode (same decisions, never
+#: materializes the per-round (Z, Q) log-prob matrix — the serving default
+#: for latency-bound rollouts).
 ASSIGN_FNS = {
     "local": local_assign,
     "greedy": greedy_assign,
     "policy": make_policy_assign,
+    "policy-fused": make_policy_assign_fused,
 }
 
 

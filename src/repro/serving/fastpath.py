@@ -1,0 +1,289 @@
+"""Online serving fast path: compile-once, double-buffered decision loop.
+
+The controller's `_policy_assign` already compiles one decision function
+against a fixed padded shape; this module is the production version of that
+idea, built for the paper's real-time regime (Q <= 100 edges, Z <= 1000
+requests per round, millisecond decisions):
+
+fixed padding buckets
+    Live rounds vary in (q, z); jit recompiles per shape. The fast path
+    quantizes every snapshot up to a small ladder of (q_pad, z_pad) buckets
+    (:data:`DEFAULT_BUCKETS` covers the paper grid) so the steady state
+    touches a handful of compiled executables, all warmed ahead of time by
+    :meth:`DecisionFastPath.warmup`. Decisions are mask-invariant (pinned
+    by tests/test_policy_stack.py), so bucket padding never changes an
+    assignment.
+
+fused in-kernel decode
+    Buckets default to ``fused_decode=True`` — argmax/top-k happen inside
+    the scoring kernel (see kernels/policy_score.py) and the round's (Z, Q)
+    log-prob matrix is never materialized; the transfer back to the host is
+    (z,) int32 instead of (Z, Q) f32. Greedy buckets also default to
+    ``normalize=False``: the log-softmax normalizer cannot change an
+    argmax, so serving skips it.
+
+double-buffered staging + donated device buffers
+    :meth:`submit` stages the padded snapshot into one of two host-side
+    numpy buffer sets (ping-pong), ships it, and returns immediately with
+    the decision still in flight (jax dispatch is async); :meth:`result`
+    blocks. Staging round n+1 therefore never overwrites host memory an
+    in-flight transfer of round n may still be reading. With ``donate=True``
+    (default off-CPU; CPU jax does not support donation) the instance
+    buffers are donated to the call, so XLA reuses the same device memory
+    round after round instead of allocating per decision.
+
+explicit SLOs
+    :class:`SLOSpec` states the latency contract (p50/p95/p99 in ms);
+    :func:`evaluate_slo` drives a fast path over a workload and returns a
+    machine-checkable pass/fail report (benchmarks/policy_latency.py
+    ``--fastpath`` writes it to results/slo_report.json; CI uploads it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inference import make_decision_fn
+from repro.core.policy import PolicyConfig
+
+#: (q_pad, z_pad) ladder covering the paper's serving grid (Q <= 100 edges,
+#: Z <= 1000 requests/round). A snapshot lands in the smallest bucket that
+#: holds it; oversize snapshots raise rather than silently recompile.
+DEFAULT_BUCKETS = ((10, 100), (25, 250), (50, 500), (100, 1000))
+
+#: Instance leaves staged per round, with their pad axis counts
+#: ((n_q_axes, n_z_axes) interpretation is positional below).
+_EDGE_KEYS = ("edge_coords", "phi", "replicas", "workload", "edge_mask")
+_REQ_KEYS = ("req_src", "req_size", "req_mask")
+
+
+def pad_instance(inst: dict, q_pad: int, z_pad: int) -> dict:
+    """Zero-pad a host-side instance to (q_pad, z_pad) (numpy, no device
+    work). Masks pad with False, so the policy's decision on the real rows
+    is unchanged (mask invariance)."""
+    q = int(np.shape(inst["edge_mask"])[-1])
+    z = int(np.shape(inst["req_mask"])[-1])
+    if q > q_pad or z > z_pad:
+        raise ValueError(f"instance ({q}, {z}) exceeds pad ({q_pad}, {z_pad})")
+    dq, dz = q_pad - q, z_pad - z
+    out = dict(inst)
+    for k in _EDGE_KEYS:
+        a = np.asarray(inst[k])
+        out[k] = np.pad(a, ((0, dq),) + ((0, 0),) * (a.ndim - 1))
+    out["w"] = np.pad(np.asarray(inst["w"]), ((0, dq), (0, dq)))
+    for k in _REQ_KEYS:
+        out[k] = np.pad(np.asarray(inst[k]), (0, dz))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Latency contract for one decision path, in milliseconds."""
+
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    name: str = "decision"
+
+    def check(self, samples_ms: Sequence[float]) -> dict:
+        """Measured percentiles vs the contract -> pass/fail report row."""
+        s = np.asarray(list(samples_ms), np.float64)
+        if s.size == 0:
+            raise ValueError("no latency samples to check against the SLO")
+        measured = {p: float(np.percentile(s, p)) for p in (50, 95, 99)}
+        target = {50: self.p50_ms, 95: self.p95_ms, 99: self.p99_ms}
+        ok = {p: measured[p] <= target[p] for p in measured}
+        return {
+            "name": self.name,
+            "samples": int(s.size),
+            "p50_ms": measured[50], "p50_slo_ms": target[50],
+            "p95_ms": measured[95], "p95_slo_ms": target[95],
+            "p99_ms": measured[99], "p99_slo_ms": target[99],
+            "p50_ok": ok[50], "p95_ok": ok[95], "p99_ok": ok[99],
+            "pass": all(ok.values()),
+        }
+
+
+class DecisionFastPath:
+    """Compile-once, double-buffered policy decision loop.
+
+    One instance owns, per padding bucket: a jitted decision function
+    (built by :func:`repro.core.inference.make_decision_fn`, fused decode
+    by default) and two ping-pong host staging buffer sets. The round loop
+    is ``submit`` (stage + async dispatch) then ``result`` (block + strip
+    padding); :meth:`decide` does both, :meth:`stream` overlaps them one
+    round deep.
+
+    ``donate=None`` resolves to True off-CPU (CPU jax warns and copies on
+    donation, so it stays off there). Greedy mode reuses one constant PRNG
+    key (the decode ignores it); sample mode folds the round counter into
+    the seed so repeated rounds draw fresh candidates.
+    """
+
+    def __init__(self, params, policy_state, cfg: PolicyConfig, *,
+                 mode: str = "greedy", num_samples: int = 64,
+                 buckets: Sequence[tuple[int, int]] = DEFAULT_BUCKETS,
+                 fused_decode: bool = True,
+                 normalize: Optional[bool] = None,
+                 num_candidates: Optional[int] = None,
+                 backend: Optional[str] = None,
+                 donate: Optional[bool] = None, seed: int = 0):
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        if normalize is None:
+            # the normalizer cannot move a greedy argmax; sampling needs
+            # true log-probs
+            normalize = mode != "greedy"
+        self.mode = mode
+        self.buckets = tuple(sorted(tuple(b) for b in buckets))
+        self.donate = donate
+        self._fn_kwargs = dict(mode=mode, num_samples=num_samples,
+                               backend=backend, fused_decode=fused_decode,
+                               num_candidates=num_candidates,
+                               normalize=normalize, donate=donate)
+        self._params, self._state, self._cfg = params, policy_state, cfg
+        self._fns: dict[tuple[int, int], object] = {}
+        self._staging: dict[tuple[int, int], list] = {}
+        self._slot: dict[tuple[int, int], int] = {}
+        self._round = 0
+        self._key0 = jax.random.PRNGKey(seed)
+        self.compile_ms: dict[tuple[int, int], float] = {}
+        self.latencies_ms: list[float] = []
+
+    # -- bucket machinery ---------------------------------------------------
+
+    def bucket_for(self, q: int, z: int) -> tuple[int, int]:
+        """Smallest bucket holding a (q, z) snapshot; raises when none do."""
+        for b in self.buckets:
+            if q <= b[0] and z <= b[1]:
+                return b
+        raise ValueError(
+            f"snapshot ({q}, {z}) exceeds every fast-path bucket "
+            f"{self.buckets}; add a larger bucket")
+
+    def _get_fn(self, bucket):
+        fn = self._fns.get(bucket)
+        if fn is None:
+            fn = make_decision_fn(self._params, self._state, self._cfg,
+                                  **self._fn_kwargs)
+            self._fns[bucket] = fn
+            # two host staging pytrees (ping-pong): stage round n+1 while
+            # round n's transfer may still be reading the other set
+            self._staging[bucket] = [None, None]
+            self._slot[bucket] = 0
+        return fn
+
+    def _stage(self, inst, bucket):
+        """Pad into this bucket's current ping-pong staging buffers."""
+        slot = self._slot[bucket]
+        self._slot[bucket] = 1 - slot
+        padded = pad_instance(inst, *bucket)
+        buf = self._staging[bucket][slot]
+        if buf is None:
+            buf = {k: np.array(v, copy=True) for k, v in padded.items()}
+            self._staging[bucket][slot] = buf
+        else:
+            for k, v in padded.items():
+                np.copyto(buf[k], v, casting="same_kind")
+        return buf
+
+    def _round_key(self):
+        if self.mode == "greedy":
+            return self._key0  # decode ignores it: constant, never re-split
+        return jax.random.fold_in(self._key0, self._round)
+
+    # -- decision loop ------------------------------------------------------
+
+    def warmup(self, buckets: Optional[Sequence[tuple[int, int]]] = None):
+        """Compile (and time) the decision executable of each bucket ahead
+        of traffic; returns {bucket: compile_ms}."""
+        for bucket in (buckets or self.buckets):
+            bucket = tuple(bucket)
+            fn = self._get_fn(bucket)
+            zero = {
+                "edge_coords": np.zeros((bucket[0], 2), np.float32),
+                "phi": np.zeros((bucket[0], 2), np.float32),
+                "replicas": np.ones(bucket[0], np.float32),
+                "workload": np.zeros((bucket[0], 3), np.float32),
+                "w": np.zeros((bucket[0], bucket[0]), np.float32),
+                "ct": np.float32(1.0),
+                "req_src": np.zeros(bucket[1], np.int32),
+                "req_size": np.zeros(bucket[1], np.float32),
+                "edge_mask": np.arange(bucket[0]) < 1,
+                "req_mask": np.zeros(bucket[1], bool),
+            }
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(jax.device_put(zero), self._key0))
+            self.compile_ms[bucket] = (time.perf_counter() - t0) * 1e3
+        return dict(self.compile_ms)
+
+    def submit(self, inst: dict):
+        """Stage + dispatch one decision; returns an in-flight handle
+        (jax async dispatch — the host is free as soon as this returns)."""
+        q = int(np.shape(inst["edge_mask"])[-1])
+        z = int(np.shape(inst["req_mask"])[-1])
+        bucket = self.bucket_for(q, z)
+        fn = self._get_fn(bucket)
+        staged = self._stage(inst, bucket)
+        dev = jax.device_put(staged)
+        out = fn(dev, self._round_key())
+        self._round += 1
+        return out, z
+
+    def result(self, handle) -> np.ndarray:
+        """Block on an in-flight decision; returns the (z,) int32 assignment
+        with bucket padding stripped."""
+        out, z = handle
+        return np.asarray(jax.block_until_ready(out))[:z]
+
+    def decide(self, inst: dict) -> np.ndarray:
+        """Synchronous submit+result, recording wall latency (ms)."""
+        t0 = time.perf_counter()
+        assign = self.result(self.submit(inst))
+        self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return assign
+
+    def stream(self, insts: Iterable[dict]):
+        """Pipelined decision stream: round n+1 is staged and dispatched
+        while round n's result is awaited (the double buffer exists for
+        exactly this overlap). Yields (z,) assignments in order."""
+        pending = None
+        for inst in insts:
+            nxt = self.submit(inst)
+            if pending is not None:
+                yield self.result(pending)
+            pending = nxt
+        if pending is not None:
+            yield self.result(pending)
+
+
+def evaluate_slo(fastpath: DecisionFastPath, insts: Sequence[dict],
+                 slo: SLOSpec, *, warmup_rounds: int = 2) -> dict:
+    """Drive the fast path over a workload and check the SLO contract.
+
+    Replays ``insts`` through :meth:`DecisionFastPath.decide` (after
+    ``warmup_rounds`` unmeasured passes over the first instance to absorb
+    compilation), then evaluates ``slo`` on the recorded wall latencies.
+    Returns the :meth:`SLOSpec.check` report plus bucket/compile metadata.
+    """
+    if not insts:
+        raise ValueError("evaluate_slo needs at least one instance")
+    if not fastpath.compile_ms:
+        fastpath.warmup()
+    before = len(fastpath.latencies_ms)
+    for _ in range(warmup_rounds):
+        fastpath.decide(insts[0])
+    del fastpath.latencies_ms[before:]
+    for inst in insts:
+        fastpath.decide(inst)
+    report = slo.check(fastpath.latencies_ms[before:])
+    report["buckets"] = [list(b) for b in fastpath.buckets]
+    report["compile_ms"] = {f"{b[0]}x{b[1]}": ms
+                            for b, ms in fastpath.compile_ms.items()}
+    report["donate"] = fastpath.donate
+    return report

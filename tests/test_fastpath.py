@@ -1,0 +1,220 @@
+"""Online serving fast path: bucket padding, double-buffered decision loop,
+SLO evaluation, and the drift-check schema compatibility."""
+import importlib.util
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import InstanceConfig, generate_instance
+from repro.core.inference import policy_decide
+from repro.core.policy import PolicyConfig, corais_init
+from repro.serving.fastpath import (DecisionFastPath, SLOSpec, evaluate_slo,
+                                    pad_instance)
+
+CFG = PolicyConfig(d_model=32, ff_hidden=64, edge_layers=2, request_layers=1)
+
+
+def _inst(q, z, seed=0):
+    return {k: np.asarray(v) for k, v in generate_instance(
+        np.random.default_rng(seed),
+        InstanceConfig(num_edges=q, num_requests=z)).items()}
+
+
+@pytest.fixture(scope="module")
+def policy():
+    return corais_init(jax.random.PRNGKey(0), CFG)
+
+
+# -- padding + buckets -------------------------------------------------------
+
+
+def test_pad_instance_is_mask_preserving():
+    inst = _inst(4, 6)
+    padded = pad_instance(inst, 7, 11)
+    assert padded["edge_mask"].shape == (7,)
+    assert padded["req_mask"].shape == (11,)
+    assert padded["w"].shape == (7, 7)
+    np.testing.assert_array_equal(padded["edge_mask"][:4],
+                                  inst["edge_mask"])
+    assert not padded["edge_mask"][4:].any()
+    assert not padded["req_mask"][6:].any()
+    np.testing.assert_array_equal(padded["req_size"][:6], inst["req_size"])
+    with pytest.raises(ValueError, match="exceeds pad"):
+        pad_instance(inst, 3, 11)
+
+
+def test_bucket_selection(policy):
+    params, state = policy
+    fp = DecisionFastPath(params, state, CFG,
+                          buckets=((8, 32), (16, 64), (4, 128)))
+    assert fp.bucket_for(3, 10) == (4, 128)  # sorted: smallest that fits
+    assert fp.bucket_for(5, 10) == (8, 32)
+    assert fp.bucket_for(9, 60) == (16, 64)
+    with pytest.raises(ValueError, match="exceeds every fast-path bucket"):
+        fp.bucket_for(17, 10)
+
+
+# -- decision loop -----------------------------------------------------------
+
+
+def test_fastpath_matches_policy_decide(policy):
+    """Bucket padding + staging + fused decode must reproduce the plain
+    policy_decide decision on the unpadded instance (mask invariance),
+    across buckets."""
+    params, state = policy
+    fp = DecisionFastPath(params, state, CFG, buckets=((8, 32), (16, 64)))
+    for q, z, seed in ((5, 20, 0), (8, 30, 1), (12, 50, 2)):
+        inst = _inst(q, z, seed)
+        got = fp.decide(inst)
+        want = np.asarray(policy_decide(
+            None, params, state, jax.tree.map(jnp.asarray, inst), CFG))
+        assert got.shape == (z,) and got.dtype == np.int32
+        np.testing.assert_array_equal(got, want, err_msg=f"q={q} z={z}")
+
+
+def test_fastpath_stream_matches_sync(policy):
+    """The pipelined (double-buffered) stream yields exactly the sync
+    decisions, in order — staging round n+1 never corrupts round n."""
+    params, state = policy
+    insts = [_inst(5, 20, s) for s in range(6)]
+    fp_sync = DecisionFastPath(params, state, CFG, buckets=((8, 32),))
+    fp_stream = DecisionFastPath(params, state, CFG, buckets=((8, 32),))
+    sync = [fp_sync.decide(i) for i in insts]
+    streamed = list(fp_stream.stream(insts))
+    assert len(streamed) == len(sync)
+    for a, b in zip(sync, streamed):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fastpath_warmup_compiles_buckets(policy):
+    params, state = policy
+    fp = DecisionFastPath(params, state, CFG, buckets=((8, 32), (16, 64)))
+    compile_ms = fp.warmup()
+    assert set(compile_ms) == {(8, 32), (16, 64)}
+    assert all(ms > 0 for ms in compile_ms.values())
+    # warmed executables answer without recompiling (latency way under
+    # compile time)
+    fp.decide(_inst(5, 20))
+    assert fp.latencies_ms[-1] < compile_ms[(8, 32)]
+
+
+def test_fastpath_modes_and_donation_default(policy):
+    params, state = policy
+    # greedy default resolves normalize off; sample keeps true log-probs
+    fp_g = DecisionFastPath(params, state, CFG, buckets=((8, 32),))
+    assert fp_g._fn_kwargs["normalize"] is False
+    fp_s = DecisionFastPath(params, state, CFG, buckets=((8, 32),),
+                            mode="sample", num_samples=8)
+    assert fp_s._fn_kwargs["normalize"] is True
+    a = fp_s.decide(_inst(5, 20, 3))
+    assert a.shape == (20,) and a.max() < 5
+    # CPU resolves donate off automatically (jax can't donate on cpu)
+    if jax.default_backend() == "cpu":
+        assert fp_g.donate is False
+
+
+# -- SLO ---------------------------------------------------------------------
+
+
+def test_slo_spec_check():
+    slo = SLOSpec(p50_ms=1.0, p95_ms=2.0, p99_ms=3.0, name="x")
+    rep = slo.check([0.5] * 90 + [5.0] * 10)
+    assert rep["p50_ok"] and not rep["p95_ok"] and not rep["p99_ok"]
+    assert rep["pass"] is False
+    assert rep["samples"] == 100
+    ok = slo.check([0.5, 0.6])
+    assert ok["pass"] is True
+    with pytest.raises(ValueError, match="no latency samples"):
+        slo.check([])
+
+
+def test_evaluate_slo_report_structure(policy):
+    params, state = policy
+    fp = DecisionFastPath(params, state, CFG, buckets=((8, 32),))
+    insts = [_inst(5, 20, s) for s in range(3)]
+    rep = evaluate_slo(fp, insts, SLOSpec(1e4, 1e4, 1e4, name="test-path"))
+    assert rep["pass"] is True and rep["name"] == "test-path"
+    assert rep["samples"] == 3  # warmup rounds not counted
+    assert rep["buckets"] == [[8, 32]]
+    assert "8x32" in rep["compile_ms"]
+    for p in (50, 95, 99):
+        assert rep[f"p{p}_ms"] > 0 and rep[f"p{p}_slo_ms"] == 1e4
+
+
+# -- drift-check schema compatibility ----------------------------------------
+
+
+def _load_drift_module():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "check_latency_drift.py")
+    spec = importlib.util.spec_from_file_location("check_latency_drift", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _v1_cell(backend, q, z, p95):
+    return {"backend": backend, "num_edges": q, "num_requests": z,
+            "single": {"p95_ms": p95}}
+
+
+def _v2_cell(backend, q, z, stage, decode, p95):
+    c = _v1_cell(backend, q, z, p95)
+    c.update(stage=stage, decode=decode)
+    return c
+
+
+def test_drift_check_reads_v1_and_v2(tmp_path):
+    """The drift gate keys v1 cells as (…, 'decision', 'host'), so v1 and
+    v2 reports/baselines interoperate and fused cells gate separately."""
+    drift = _load_drift_module()
+    v1 = {"schema": "corais.policy_latency.v1",
+          "cells": [_v1_cell("pallas", 5, 20, 1.0)]}
+    v2 = {"schema": "corais.policy_latency.v2",
+          "cells": [_v2_cell("pallas", 5, 20, "decision", "host", 1.1),
+                    _v2_cell("pallas", 5, 20, "decision", "fused", 0.4),
+                    _v2_cell("pallas", 5, 20, "head", "fused", 0.1)]}
+    p1, p2 = tmp_path / "v1.json", tmp_path / "v2.json"
+    p1.write_text(json.dumps(v1))
+    p2.write_text(json.dumps(v2))
+    k1 = drift.load_report_cells(str(p1))
+    k2 = drift.load_report_cells(str(p2))
+    assert ("pallas", 5, 20, "decision", "host") in k1
+    assert set(k1) < set(k2)
+
+    # v2 report vs v1-schema baseline: overlapping host cell gates, fused
+    # cells are new and skipped
+    base = {"schema": "corais.policy_latency_baseline.v1",
+            "cells": [{"backend": "pallas", "num_edges": 5,
+                       "num_requests": 20, "p95_ms": 1.0}]}
+    bp = tmp_path / "base.json"
+    bp.write_text(json.dumps(base))
+    assert drift.check(str(p2), str(bp), factor=4.0, floor_ms=0.0) == 0
+    # and the gate still trips on real drift
+    slow = {"schema": "corais.policy_latency.v2",
+            "cells": [_v2_cell("pallas", 5, 20, "decision", "host", 99.0)]}
+    ps = tmp_path / "slow.json"
+    ps.write_text(json.dumps(slow))
+    assert drift.check(str(ps), str(bp), factor=4.0, floor_ms=0.0) == 1
+
+
+def test_drift_write_baseline_roundtrip(tmp_path):
+    """write_baseline distills a v2 report into a v2 baseline whose cells
+    gate that same report cleanly (including fused/head cells)."""
+    drift = _load_drift_module()
+    report = {"schema": "corais.policy_latency.v2",
+              "cells": [_v2_cell("pallas", 5, 20, "decision", "fused", 0.4),
+                        _v2_cell("pallas", 100, 1000, "head", "host", 2.2),
+                        _v2_cell("xla", 5, 20, "decision", "host", 0.9)]}
+    rp, bp = tmp_path / "r.json", tmp_path / "b.json"
+    rp.write_text(json.dumps(report))
+    drift.write_baseline(str(rp), str(bp))
+    payload = json.loads(bp.read_text())
+    assert payload["schema"] == "corais.policy_latency_baseline.v2"
+    assert len(payload["cells"]) == 3
+    assert {c["stage"] for c in payload["cells"]} == {"decision", "head"}
+    assert drift.check(str(rp), str(bp), factor=4.0, floor_ms=0.0) == 0

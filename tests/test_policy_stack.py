@@ -1,6 +1,7 @@
 """Unified policy inference stack: encode/score split, backend registry
-parity (xla / ref / pallas-interpret), custom-VJP gradients, mask
-invariance under padding, and the engine's named policy backend."""
+parity (xla / ref / pallas-interpret), fused-decode parity and
+no-materialization guarantees, custom-VJP gradients, mask invariance under
+padding, and the engine's named policy backends."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +11,7 @@ from repro.core import InstanceConfig, generate_batch
 from repro.core.inference import make_decision_fn, policy_decide
 from repro.core.policy import (PolicyConfig, corais_apply, corais_encode,
                                corais_init, corais_score,
-                               list_score_backends)
+                               corais_score_decode, list_score_backends)
 from repro.serving import engine
 from repro.workloads import materialize_rounds, scenario
 
@@ -303,3 +304,255 @@ def test_make_decision_fn_modes():
         assert a.shape == (12,) and a.dtype == np.int32 and a.max() < 5
     with pytest.raises(ValueError, match="decode mode"):
         policy_decide(None, params, state, inst, CFG, mode="beam")
+
+
+# -- fused decode: parity, no-materialization, sampled dispatch --------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("k,normalize", [(1, True), (1, False), (3, True)])
+def test_decode_backend_parity(backend, k, normalize):
+    """corais_score_decode agrees with the materialized xla decode across
+    every backend: identical winner indices, values <= 1e-5, batched and
+    unbatched (candidate slots only up to the real edge count — beyond it
+    the kernel's output is documented undefined)."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(q=4, q_pad=6, z=9, z_pad=13)  # padded + odd Z
+    c, h, _ = corais_encode(params, state, batch, CFG)
+    ti0, tv0 = corais_score_decode(params, c, h, batch["edge_mask"], CFG,
+                                   k=k, normalize=normalize, backend="xla")
+    ti, tv = corais_score_decode(params, c, h, batch["edge_mask"], CFG,
+                                 k=k, normalize=normalize, backend=backend)
+    assert ti.shape == tv.shape == batch["req_mask"].shape + (k,)
+    assert ti.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(ti0))
+    np.testing.assert_allclose(np.asarray(tv), np.asarray(tv0),
+                               rtol=1e-5, atol=1e-5)
+    # unbatched through the same entry
+    inst = jax.tree.map(lambda x: x[0], batch)
+    c1, h1, _ = corais_encode(params, state, inst, CFG)
+    ti1, tv1 = corais_score_decode(params, c1, h1, inst["edge_mask"], CFG,
+                                   k=k, normalize=normalize, backend=backend)
+    ti1x, tv1x = corais_score_decode(params, c1, h1, inst["edge_mask"], CFG,
+                                     k=k, normalize=normalize, backend="xla")
+    np.testing.assert_array_equal(np.asarray(ti1), np.asarray(ti1x))
+    np.testing.assert_allclose(np.asarray(tv1), np.asarray(tv1x),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_decode_matches_materialized_score(backend):
+    """The fused decode's top-1 must be the argmax of the materialized
+    log-prob matrix, and its log-prob the gathered matrix entry."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=2, q=5, z=11)
+    c, h, _ = corais_encode(params, state, batch, CFG)
+    lp = corais_score(params, c, h, batch["edge_mask"], CFG, backend="xla")
+    ti, tv = corais_score_decode(params, c, h, batch["edge_mask"], CFG,
+                                 k=1, normalize=True, backend=backend)
+    np.testing.assert_array_equal(np.asarray(ti)[..., 0],
+                                  np.argmax(np.asarray(lp), axis=-1))
+    gathered = np.take_along_axis(np.asarray(lp), np.asarray(ti), axis=-1)
+    np.testing.assert_allclose(np.asarray(tv), gathered,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_decode_mask_and_padding_invariance(backend):
+    """Bucket-padding an instance (extra masked edges and requests) must
+    not move any real request's fused-decode candidates."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1, q=4, z=6)
+    inst = jax.tree.map(lambda x: x[0], batch)
+    padded = _pad_instance(inst, q_pad=7, z_pad=11)
+    c0, h0, _ = corais_encode(params, state, inst, CFG)
+    c1, h1, _ = corais_encode(params, state, padded, CFG)
+    for normalize in (True, False):
+        ti0, tv0 = corais_score_decode(params, c0, h0, inst["edge_mask"],
+                                       CFG, k=2, normalize=normalize,
+                                       backend=backend)
+        ti1, tv1 = corais_score_decode(params, c1, h1, padded["edge_mask"],
+                                       CFG, k=2, normalize=normalize,
+                                       backend=backend)
+        np.testing.assert_array_equal(np.asarray(ti1)[:6], np.asarray(ti0))
+        np.testing.assert_allclose(np.asarray(tv1)[:6], np.asarray(tv0),
+                                   rtol=0, atol=1e-5)
+        # padded edges never win a candidate slot for real requests
+        assert np.asarray(ti1)[:6].max() < 4
+
+
+def test_decode_rejects_unknown_backend():
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1)
+    c, h, _ = corais_encode(params, state, batch, CFG)
+    with pytest.raises(ValueError, match="unknown decode backend"):
+        corais_score_decode(params, c, h, batch["edge_mask"], CFG,
+                            backend="nope")
+
+
+def _jaxpr_shapes(jaxpr, acc):
+    """All aval shapes in a jaxpr, recursing into sub-jaxprs (pjit bodies,
+    scan/cond branches, pallas_call kernel jaxprs)."""
+    def subs(val):
+        if hasattr(val, "jaxpr"):  # ClosedJaxpr
+            yield val.jaxpr
+        elif hasattr(val, "eqns"):  # Jaxpr
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from subs(v)
+
+    for v in list(jaxpr.invars) + list(jaxpr.outvars) + list(jaxpr.constvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "shape"):
+            acc.add(tuple(aval.shape))
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                acc.add(tuple(aval.shape))
+        for val in eqn.params.values():
+            for sub in subs(val):
+                _jaxpr_shapes(sub, acc)
+    return acc
+
+
+def test_fused_decode_never_materializes_zq():
+    """The tentpole guarantee, asserted on the program itself: the fused
+    decode head's jaxpr contains no (Z, Q)-shaped intermediate anywhere
+    (sub-jaxprs included) once the Z-block is smaller than Z, while the
+    materialized host path provably does. Q and Z are chosen distinct from
+    every other dimension so the shape match is unambiguous."""
+    from repro.kernels import ops
+    q, z, d, bz = 5, 64, 16, 32  # bz < z: full (Z, Q) can't hide in a block
+    c = jax.random.normal(jax.random.PRNGKey(0), (q, d)) * 0.3
+    h = jax.random.normal(jax.random.PRNGKey(1), (z, d)) * 0.3
+    wx = jax.random.normal(jax.random.PRNGKey(2), (d, d)) * 0.3
+    wy = jax.random.normal(jax.random.PRNGKey(3), (d, d)) * 0.3
+    mask = jnp.ones(q, bool)
+
+    fused = jax.make_jaxpr(
+        lambda c, h: ops.policy_score_decode(c, h, wx, wy, mask, k=1,
+                                             normalize=False, bz=bz))(c, h)
+    shapes = _jaxpr_shapes(fused.jaxpr, set())
+    assert (z, q) not in shapes and (q, z) not in shapes, sorted(shapes)
+
+    # sanity: the same walk catches the materialized path red-handed
+    host = jax.make_jaxpr(
+        lambda c, h: jnp.argmax(ops.policy_score(c, h, wx, wy, mask),
+                                axis=-1))(c, h)
+    assert (z, q) in _jaxpr_shapes(host.jaxpr, set())
+
+
+def test_policy_decide_fused_greedy_matches_host():
+    """Same greedy decision through the fused and materialized routes, with
+    and without the log-softmax normalizer, every backend."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1, q=5, z=12)
+    inst = jax.tree.map(lambda x: x[0], batch)
+    a0 = np.asarray(policy_decide(None, params, state, inst, CFG))
+    for backend in BACKENDS:
+        for normalize in (True, False):
+            a = np.asarray(policy_decide(None, params, state, inst, CFG,
+                                         fused_decode=True,
+                                         normalize=normalize,
+                                         backend=backend))
+            np.testing.assert_array_equal(a, a0, err_msg=f"{backend}")
+
+
+def test_policy_decide_sampled_fused_matches_dense_at_full_k():
+    """With num_candidates=None (K = Q) the kernel top-k carries the whole
+    categorical distribution, so the fused sampled dispatch reproduces the
+    dense one draw for draw under the same key."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1, q=5, z=12)
+    inst = jax.tree.map(lambda x: x[0], batch)
+    for seed in (0, 1, 2):
+        k = jax.random.PRNGKey(seed)
+        dense = policy_decide(k, params, state, inst, CFG, mode="sample",
+                              num_samples=12)
+        fused = policy_decide(k, params, state, inst, CFG, mode="sample",
+                              num_samples=12, fused_decode=True)
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(fused))
+
+
+def test_topk_sampling_distribution():
+    """Seeded statistical pin of the sampled dispatch distribution.
+
+    Exact part: at K = Q the renormalized kernel candidate set scatters
+    back to exactly the dense softmax. Statistical part: empirical marginals
+    of categorical draws over the (Z, K) candidate values stay within a
+    small total-variation distance of the renormalized truncated
+    distribution (and of the dense distribution at K = Q)."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1, q=5, z=8)
+    inst = jax.tree.map(lambda x: x[0], batch)
+    c, h, _ = corais_encode(params, state, inst, CFG)
+    lp = np.asarray(corais_score(params, c, h, inst["edge_mask"], CFG))
+    z, q = lp.shape
+
+    ti, tv = corais_score_decode(params, c, h, inst["edge_mask"], CFG,
+                                 k=q, normalize=True, backend="pallas")
+    scattered = np.full((z, q), -np.inf, np.float32)
+    np.put_along_axis(scattered, np.asarray(ti), np.asarray(tv), axis=-1)
+    np.testing.assert_allclose(np.exp(scattered), np.exp(lp),
+                               rtol=1e-5, atol=1e-5)
+
+    for k in (3, q):
+        tik, tvk = corais_score_decode(params, c, h, inst["edge_mask"], CFG,
+                                       k=k, normalize=True, backend="pallas")
+        n = 4000
+        slots = jax.random.categorical(
+            jax.random.PRNGKey(7), jnp.asarray(tvk)[None], axis=-1,
+            shape=(n, z))
+        draws = np.take_along_axis(np.asarray(tik)[None],
+                                   np.asarray(slots)[..., None],
+                                   axis=-1)[..., 0]            # (n, z)
+        emp = np.stack([(draws == e).mean(axis=0) for e in range(q)], -1)
+        # renormalized truncated target
+        p = np.exp(np.asarray(tvk))
+        target = np.zeros((z, q))
+        np.put_along_axis(target, np.asarray(tik), p / p.sum(-1, keepdims=True),
+                          axis=-1)
+        tv_dist = 0.5 * np.abs(emp - target).sum(axis=-1)
+        assert tv_dist.max() < 0.05, (k, tv_dist.max())
+
+
+def test_engine_policy_fused_backend_matches_policy():
+    """Full batched rollouts through ASSIGN_FNS['policy-fused'] produce the
+    same assignments as the materialized policy backend."""
+    pcfg = PolicyConfig(d_model=32, ff_hidden=64, edge_layers=1,
+                        request_layers=1)
+    params, pstate = corais_init(jax.random.PRNGKey(0), pcfg)
+    q, rounds, dt = 4, 4, 0.25
+    arr = materialize_rounds(scenario("uniform_iid"), q, rounds, dt, seed=2)
+    cfg = engine.EngineConfig(num_edges=q, num_rounds=rounds,
+                              round_interval=dt,
+                              max_per_round=arr["mask"].shape[-1])
+    outs = {}
+    for name in ("policy", "policy-fused"):
+        fn = engine.resolve_assign_fn(
+            name, params=params, policy_state=pstate, policy_cfg=pcfg,
+            backend="pallas")
+        run = engine.make_rollout(cfg, fn)
+        _, infos = run(engine.init_state(cfg, 2), arr, jax.random.PRNGKey(0))
+        outs[name] = jax.device_get(infos["assign"])
+    np.testing.assert_array_equal(outs["policy-fused"], outs["policy"])
+
+
+def test_make_decision_fn_fused_modes():
+    """The compile-once serving entry with fused_decode: both modes return
+    valid assignments and greedy matches the materialized decision fn."""
+    params, state = corais_init(jax.random.PRNGKey(0), CFG)
+    batch = _batch(b=1)
+    inst = jax.tree.map(lambda x: x[0], batch)
+    host = make_decision_fn(params, state, CFG)
+    for mode in ("greedy", "sample"):
+        decide = make_decision_fn(params, state, CFG, mode=mode,
+                                  num_samples=8, fused_decode=True,
+                                  normalize=mode != "greedy")
+        a = np.asarray(decide(inst, jax.random.PRNGKey(0)))
+        assert a.shape == (12,) and a.dtype == np.int32 and a.max() < 5
+        if mode == "greedy":
+            np.testing.assert_array_equal(
+                a, np.asarray(host(inst, jax.random.PRNGKey(0))))
