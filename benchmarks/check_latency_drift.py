@@ -90,7 +90,7 @@ def print_slo_table(slo_path: str) -> None:
 
 
 def check(report_path: str, baseline_path: str, *, factor: float,
-          floor_ms: float) -> int:
+          floor_ms: float, allow_missing: bool = False) -> int:
     with open(baseline_path) as f:
         baseline = json.load(f)
     schema = baseline.get("schema")
@@ -120,11 +120,25 @@ def check(report_path: str, baseline_path: str, *, factor: float,
     for b, q, z, stage, decode in skipped:
         print(f"  {b:7s} {stage:8s} {decode:5s} Q={q:4d} Z={z:5d} "
               f"(no baseline cell, skipped)")
+    # Baseline cells the fresh report never measured are a silent hole in
+    # the gate (a renamed backend or dropped grid point would pass forever),
+    # so they fail by default; --allow-missing opts out during intentional
+    # grid shrinks.
+    missing = sorted(set(base) - set(current))
+    for b, q, z, stage, decode in missing:
+        print(f"  {b:7s} {stage:8s} {decode:5s} Q={q:4d} Z={z:5d} "
+              f"(baseline cell MISSING from report)")
     if failures:
         print(f"FAIL: {len(failures)}/{len(common)} cells regressed beyond "
               f"{factor:.1f}x baseline (floor {floor_ms:.1f}ms)")
         return 1
-    print(f"OK: {len(common)} cells within {factor:.1f}x of baseline")
+    if missing and not allow_missing:
+        print(f"FAIL: {len(missing)} baseline cell(s) missing from the "
+              f"report — regenerate it over the full grid or pass "
+              f"--allow-missing for an intentional shrink")
+        return 1
+    print(f"OK: {len(common)} cells within {factor:.1f}x of baseline"
+          + (f" ({len(missing)} missing cell(s) allowed)" if missing else ""))
     return 0
 
 
@@ -140,6 +154,9 @@ def main() -> None:
                     help="cells under this absolute p95 never fail")
     ap.add_argument("--write-baseline", action="store_true",
                     help="distill --report into --baseline and exit")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="do not fail when baseline cells are absent from "
+                         "the report (intentional grid shrink)")
     ap.add_argument("--slo-report", nargs="?", const=DEFAULT_SLO_REPORT,
                     default=None,
                     help="also print the fast-path SLO table from this "
@@ -152,7 +169,7 @@ def main() -> None:
     if args.slo_report and os.path.exists(args.slo_report):
         print_slo_table(args.slo_report)
     sys.exit(check(args.report, args.baseline, factor=args.factor,
-                   floor_ms=args.floor_ms))
+                   floor_ms=args.floor_ms, allow_missing=args.allow_missing))
 
 
 if __name__ == "__main__":

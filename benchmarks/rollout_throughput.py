@@ -8,11 +8,20 @@ scheduling for one instance at a time; the batched engine jits one
 with batch. The acceptance bar this reports against: >= 10x at batch >= 64
 on the default scenario.
 
+``--fleet 1,2,4,8`` additionally runs the fleet-sharded rollout
+(:mod:`repro.serving.fleet`) at each shard count on a ``("fleet",)`` device
+mesh and reports the scaling curve (request-rounds/s per shard count,
+speedup vs 1 shard, Zipf placement imbalance and cross-shard transfer
+accounting). Shard counts beyond 1 need real or forced host devices —
+launch through benchmarks/run_hw.sh with HOST_DEVICES set.
+
 Run:  PYTHONPATH=src python benchmarks/rollout_throughput.py
       PYTHONPATH=src python benchmarks/rollout_throughput.py \\
           --rounds 4 --batch 8            # CI smoke
       PYTHONPATH=src python benchmarks/rollout_throughput.py \\
           --batch 1,8,64,256 --backend greedy
+      HOST_DEVICES=8 benchmarks/run_hw.sh rollout_throughput \\
+          --fleet 1,2,4,8 --fleet-batch 64
 """
 from __future__ import annotations
 
@@ -98,6 +107,57 @@ def bench_engine(name: str, backend: str, num_edges: int, rounds: int,
     }
 
 
+def bench_fleet(name: str, backend: str, num_edges: int, rounds: int,
+                interval: float, seed: int, batch: int, shards: int,
+                skew: float, repeat: int) -> dict:
+    """One fleet-sharded rollout at ``shards`` shards: Zipf-partitioned
+    placement, shard_map rollout, psum-reduced summary partials."""
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.serving import (apply_partition, fleet_summary,
+                               make_fleet_rollout, zipf_partition)
+
+    mesh = make_fleet_mesh(shards)
+    arrivals = materialize_round_batch(
+        scenario(name), num_edges, rounds, interval, batch, base_seed=seed)
+    cfg = EngineConfig(num_edges=num_edges, num_rounds=rounds,
+                       round_interval=interval,
+                       max_per_round=arrivals["mask"].shape[-1])
+    part = zipf_partition(batch, shards, skew=skew, seed=seed)
+    states = apply_partition(part, init_batch(cfg, range(seed, seed + batch)))
+    arrivals = apply_partition(part, arrivals)
+    keys = apply_partition(
+        part, np.asarray(jax.random.split(jax.random.PRNGKey(seed), batch)))
+    displaced = part.placed_displaced
+    run = make_fleet_rollout(cfg, resolve_assign_fn(backend), mesh)
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(states, arrivals, keys, displaced))
+    compile_s = time.perf_counter() - t0
+    walls, partials = [], None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        partials = run(states, arrivals, keys, displaced)
+        jax.block_until_ready(partials)
+        walls.append(time.perf_counter() - t0)
+    wall = min(walls)
+    m = fleet_summary(partials)
+    request_rounds = m["submitted"] * rounds
+    return {
+        "shards": shards,
+        "batch": batch,
+        "wall_s": wall,
+        "compile_s": compile_s,
+        "requests": m["submitted"],
+        "completed": m["completed"],
+        "request_rounds": request_rounds,
+        "request_rounds_per_s": request_rounds / max(wall, 1e-12),
+        "cross_shard_transferred": m.get("cross_shard_transferred", 0),
+        "intra_fleet_transferred": m.get("intra_fleet_transferred", 0),
+        "cross_shard_frac": m.get("cross_shard_frac", 0.0),
+        "imbalance": part.imbalance_report(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="uniform_iid")
@@ -109,10 +169,26 @@ def main() -> None:
                     help="comma list of engine batch sizes")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--fleet", default=None,
+                    help="comma list of fleet shard counts (e.g. 1,2,4,8); "
+                         "runs the sharded rollout scaling curve. Counts > 1 "
+                         "need host devices: HOST_DEVICES=8 "
+                         "benchmarks/run_hw.sh rollout_throughput ...")
+    ap.add_argument("--fleet-batch", type=int, default=64,
+                    help="instance batch for the fleet scaling curve")
+    ap.add_argument("--fleet-skew", type=float, default=0.9,
+                    help="Zipf skew of the fleet home-shard draw")
     ap.add_argument("--out", default=None,
                     help="report path (default results/rollout_throughput.json)")
     args = ap.parse_args()
     batches = [int(b) for b in str(args.batch).split(",")]
+    fleet_shards = ([int(s) for s in str(args.fleet).split(",")]
+                    if args.fleet else [])
+    if fleet_shards and max(fleet_shards) > len(jax.devices()):
+        raise SystemExit(
+            f"--fleet {args.fleet} needs {max(fleet_shards)} device(s) but "
+            f"only {len(jax.devices())} visible; launch through "
+            f"HOST_DEVICES={max(fleet_shards)} benchmarks/run_hw.sh")
 
     print(f"== rollout throughput: scenario={args.scenario} "
           f"backend={args.backend} rounds={args.rounds} ==")
@@ -134,6 +210,26 @@ def main() -> None:
               f"req-rounds/s  ({row['requests']} requests, "
               f"{row['wall_s'] * 1e3:.1f} ms, {row['speedup_vs_event']:.1f}x)")
 
+    fleet_rows = []
+    for shards in fleet_shards:
+        row = bench_fleet(args.scenario, args.backend, args.edges,
+                          args.rounds, args.interval, args.seed,
+                          args.fleet_batch, shards, args.fleet_skew,
+                          args.repeat)
+        row["speedup_vs_1shard"] = (
+            row["request_rounds_per_s"]
+            / max(fleet_rows[0]["request_rounds_per_s"], 1e-12)
+            if fleet_rows else 1.0)
+        fleet_rows.append(row)
+        imb = row["imbalance"]
+        print(f"  fleet ({shards:2d} shard{'s' if shards > 1 else ' '}, "
+              f"batch={row['batch']}) {row['request_rounds_per_s']:12.0f} "
+              f"req-rounds/s  ({row['wall_s'] * 1e3:.1f} ms, "
+              f"{row['speedup_vs_1shard']:.2f}x vs 1 shard, "
+              f"home imbalance {imb['home_imbalance']:.2f}, "
+              f"{imb['displaced_instances']} displaced, "
+              f"cross-shard {row['cross_shard_transferred']})")
+
     report = {
         "schema": REPORT_SCHEMA,
         "config": {
@@ -141,9 +237,12 @@ def main() -> None:
             "num_edges": args.edges, "rounds": args.rounds,
             "interval": args.interval, "seed": args.seed,
             "repeat": args.repeat, "batches": batches,
+            "fleet_shards": fleet_shards, "fleet_batch": args.fleet_batch,
+            "fleet_skew": args.fleet_skew,
         },
         "event_sim": event,
         "engine": engine_rows,
+        "fleet": fleet_rows,
     }
     out = args.out or os.path.join(os.path.dirname(__file__), "..",
                                    "results", "rollout_throughput.json")

@@ -5,7 +5,10 @@ touches jax device state (device count is locked at first jax init).
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,8 +18,42 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model_parallel: int = 1):
-    """Mesh over the actually-available devices (tests, examples)."""
+def make_host_mesh(model_parallel: int = 1,
+                   axis_names: tuple[str, str] = ("data", "model")):
+    """Mesh over the actually-available devices (tests, examples).
+
+    Raises ``ValueError`` (not ``assert``, which vanishes under ``python
+    -O``) when the device count does not divide: the fleet mesh and every
+    sharded test build on this helper, so a bad layout must fail loudly."""
     n = len(jax.devices())
-    assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+    if model_parallel < 1 or n % model_parallel != 0:
+        raise ValueError(
+            f"cannot build a host mesh: {n} available device(s) not "
+            f"divisible by model_parallel={model_parallel}")
+    return jax.make_mesh((n // model_parallel, model_parallel), axis_names)
+
+
+def make_fleet_mesh(num_shards: int | None = None, *, dry_run: bool = False):
+    """1-D ``("fleet",)`` mesh for fleet-sharded rollouts
+    (:mod:`repro.serving.fleet`).
+
+    Locally this builds on :func:`make_host_mesh`: every available device
+    lands on the fleet axis (``num_shards=None``), or the first
+    ``num_shards`` devices do — the subset form exists for scaling curves
+    (1, 2, 4, 8 shards on one forced 8-device host). With ``dry_run=True``
+    the 256-chip :func:`make_production_mesh` pod is flattened onto one
+    fleet axis (usable only under the dry-run harness that forces that many
+    devices)."""
+    if dry_run:
+        prod = make_production_mesh()
+        return Mesh(prod.devices.reshape(-1), ("fleet",))
+    devices = jax.devices()
+    n = len(devices)
+    if num_shards is None or num_shards == n:
+        host = make_host_mesh(1, axis_names=("fleet", "model"))
+        return Mesh(host.devices.reshape(-1), ("fleet",))
+    if not 1 <= num_shards <= n:
+        raise ValueError(
+            f"cannot build a fleet mesh with {num_shards} shard(s): "
+            f"{n} device(s) available")
+    return Mesh(np.asarray(devices[:num_shards]), ("fleet",))

@@ -4,15 +4,22 @@ from repro.serving.edge import SimEdge
 from repro.serving.engine import (ASSIGN_FNS, EngineConfig, greedy_assign,
                                   init_batch, init_state, local_assign,
                                   make_policy_assign, make_rollout,
-                                  resolve_assign_fn, step_round, summarize)
+                                  partials_to_summary, resolve_assign_fn,
+                                  step_round, summarize, summarize_partials)
 from repro.serving.fastpath import (DEFAULT_BUCKETS, DecisionFastPath,
                                     SLOSpec, evaluate_slo, pad_instance)
+from repro.serving.fleet import (FleetPartition, apply_partition,
+                                 fleet_summary, make_fleet_rollout,
+                                 zipf_partition)
 from repro.serving.topology import nearest_alive_edge
 
 __all__ = ["CentralController", "SchedulerChoice", "MultiEdgeSim", "SimConfig",
            "SimEdge", "nearest_alive_edge",
            "EngineConfig", "init_state", "init_batch", "step_round",
-           "make_rollout", "summarize", "local_assign", "greedy_assign",
+           "make_rollout", "summarize", "summarize_partials",
+           "partials_to_summary", "local_assign", "greedy_assign",
            "make_policy_assign", "ASSIGN_FNS", "resolve_assign_fn",
+           "FleetPartition", "zipf_partition", "apply_partition",
+           "make_fleet_rollout", "fleet_summary",
            "DecisionFastPath", "SLOSpec", "DEFAULT_BUCKETS", "evaluate_slo",
            "pad_instance"]

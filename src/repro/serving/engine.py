@@ -178,6 +178,26 @@ def init_batch(cfg: EngineConfig, seeds) -> dict:
 # ---------------------------------------------------------------------------
 
 
+def stable_order(keys):
+    """Stable ascending argsort of 1-D ``keys`` without an XLA sort op.
+
+    The lane scans below consume the permutation as scan xs only, which
+    leaves the sort's key output dead. Under a jitted ``shard_map`` (the
+    fleet rollout) the SPMD partitioner then rewrites that sort into
+    ``select(partition_id == 0, keys, 0)`` + all-reduce before sorting —
+    every shard silently schedules with shard 0's keys. Rank-by-pairwise-
+    comparison has no sort op to mis-partition and is bit-identical to
+    ``jnp.argsort`` (stable: ties resolve toward the lower index); the n^2
+    comparisons are noise next to the O(n) sequential scan that consumes
+    the order."""
+    n = keys.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    before = (keys[None, :] < keys[:, None]) | (
+        (keys[None, :] == keys[:, None]) & (idx[None, :] < idx[:, None]))
+    rank = jnp.sum(before, axis=1)  # permutation: rank[i] = sorted position
+    return jnp.zeros(n, jnp.int32).at[rank].set(idx)
+
+
 def advance(state: dict, t_new, cfg: EngineConfig) -> dict:
     """Move time forward to ``t_new``: finalize the lane schedule of every
     slot whose start time arrives by ``t_new`` (ready order; mirrors the
@@ -190,7 +210,7 @@ def advance(state: dict, t_new, cfg: EngineConfig) -> dict:
     startable = ((state["slot_edge"] >= 0) & (state["slot_start"] > INF / 2)
                  & (state["slot_ready"] <= t_new))
     keys = jnp.where(startable, state["slot_ready"], INF)
-    order = jnp.argsort(keys)  # stable: ties resolve in slot (= arrival) order
+    order = stable_order(keys)  # stable: ties resolve in slot (arrival) order
 
     def body(carry, idx):
         lane_free, start, finish, psums = carry
@@ -539,6 +559,161 @@ def summarize(state: dict, slo: Optional[float] = None) -> dict:
     return out
 
 
+#: Response-time histogram defaults for the shard-friendly summary path:
+#: fixed bins so per-shard partial histograms psum into the global one.
+HIST_BINS = 256
+HIST_MAX = 32.0
+
+
+def summarize_partials(state: dict, *, hist_bins: int = HIST_BINS,
+                       hist_max: float = HIST_MAX, displaced=None,
+                       slo: Optional[float] = None) -> dict:
+    """Pure-jnp summary partials from a (possibly batched) final state.
+
+    The mergeable core of :func:`summarize`: every value is either a sum
+    (counts, response-time histogram, per-edge completions, response-time
+    total) or a max (max response, makespan) over the state's instances, so
+    per-shard partials reduce into the fleet-wide summary with one
+    psum/pmax instead of ``device_get``-ing the full slot table
+    (:mod:`repro.serving.fleet`). :func:`partials_to_summary` turns the
+    reduced partials back into ``summarize``-style metrics; p50/p95 are
+    estimated from the fixed-bin histogram (responses past ``hist_max``
+    land in the last bin, so tail percentiles degrade gracefully to
+    ``max_response``).
+
+    ``displaced`` is an optional (B,) bool — True for instances placed off
+    their home shard by the fleet partition (:func:`repro.serving.fleet
+    .zipf_partition`) — and splits transfer traffic into intra-fleet vs
+    cross-shard accounting."""
+    committed = state["slot_edge"] >= 0
+    finish = state["slot_finish"]
+    t = jnp.asarray(state["t"])
+    tb = jnp.expand_dims(t, axis=tuple(range(t.ndim, finish.ndim)))
+    done = committed & (finish <= tb)
+    resp = jnp.where(done, finish - state["slot_submit"], 0.0)
+
+    num_done = jnp.sum(done).astype(jnp.int32)
+    shed = jnp.sum(state["shed"]).astype(jnp.int32)
+    dropped = jnp.sum(state["dropped"]).astype(jnp.int32)
+    num_committed = jnp.sum(committed).astype(jnp.int32)
+
+    scale = hist_bins / hist_max
+    idx = jnp.clip((resp * scale).astype(jnp.int32), 0, hist_bins - 1)
+    hist = jnp.zeros(hist_bins, jnp.int32).at[idx.ravel()].add(
+        done.ravel().astype(jnp.int32))
+
+    q = state["w"].shape[-1]
+    edges = jnp.clip(state["slot_edge"], 0, q - 1)
+    per_edge = jnp.zeros(q, jnp.int32).at[edges.ravel()].add(
+        done.ravel().astype(jnp.int32))
+
+    transferred = done & (state["slot_edge"] != state["slot_src"])
+    if displaced is None:
+        disp_slots = jnp.zeros_like(done)
+        displaced_instances = jnp.int32(0)
+    else:
+        disp = jnp.asarray(displaced, bool)
+        disp_slots = jnp.expand_dims(
+            disp, axis=tuple(range(disp.ndim, done.ndim))) & done
+        displaced_instances = jnp.sum(disp).astype(jnp.int32)
+
+    out = {
+        "completed": num_done,
+        "submitted": num_committed + shed + dropped,
+        "shed": shed,
+        "dropped": dropped,
+        "stranded": num_committed - num_done,
+        "retried": jnp.sum(committed
+                           & (state["slot_retries"] > 0)).astype(jnp.int32),
+        "resp_sum": jnp.sum(resp),
+        "resp_max": jnp.max(resp),
+        "makespan": jnp.max(jnp.where(done, finish, 0.0)),
+        "resp_hist": hist,
+        "per_edge_completed": per_edge,
+        "transferred": jnp.sum(transferred).astype(jnp.int32),
+        "cross_shard_transferred": jnp.sum(
+            transferred & disp_slots).astype(jnp.int32),
+        "cross_shard_completed": jnp.sum(disp_slots).astype(jnp.int32),
+        "displaced_instances": displaced_instances,
+    }
+    if slo is not None:
+        out["slo_violations"] = jnp.sum(done & (resp > slo)).astype(jnp.int32)
+    return out
+
+
+#: partial keys merged with a max (everything else sums)
+PARTIAL_MAX_KEYS = frozenset({"resp_max", "makespan"})
+
+
+def _hist_percentile(hist: np.ndarray, pct: float, hist_max: float,
+                     resp_max: float) -> float:
+    """Deterministic percentile estimate from fixed-bin counts (linear
+    interpolation inside the covering bin; the overflow bin reports
+    ``resp_max``). Shard-order invariant: identical histograms give
+    identical estimates no matter how the counts were accumulated."""
+    total = int(hist.sum())
+    cum = np.cumsum(hist)
+    target = pct / 100.0 * total
+    b = int(np.searchsorted(cum, max(target, 1e-9), side="left"))
+    b = min(b, len(hist) - 1)
+    if b == len(hist) - 1:  # overflow bin: past hist_max, report the max
+        return float(resp_max)
+    prev = float(cum[b - 1]) if b > 0 else 0.0
+    frac = (target - prev) / max(float(hist[b]), 1.0)
+    width = hist_max / len(hist)
+    return float(min((b + min(max(frac, 0.0), 1.0)) * width, resp_max))
+
+
+def partials_to_summary(partials: dict, slo: Optional[float] = None,
+                        hist_max: float = HIST_MAX) -> dict:
+    """Host-side: reduced :func:`summarize_partials` -> ``summarize``-style
+    metrics dict. p50/p95 come from the histogram (see
+    :func:`summarize_partials`); all counts, ``mean_response``,
+    ``max_response`` and ``makespan`` are exact."""
+    p = {k: np.asarray(jax.device_get(v)) for k, v in partials.items()}
+    completed = int(p["completed"])
+    submitted = int(p["submitted"])
+    shed, dropped = int(p["shed"]), int(p["dropped"])
+    stranded = int(p["stranded"])
+    out = {
+        "completed": completed,
+        "submitted": submitted,
+        "shed_requests": shed,
+        "dropped_requests": dropped,
+        "stranded_requests": stranded,
+        "retried_requests": int(p["retried"]),
+        "shed_rate": (shed + dropped) / max(submitted, 1),
+        "displaced_instances": int(p["displaced_instances"]),
+    }
+    if not completed:
+        return out
+    resp_max = float(p["resp_max"])
+    transferred = int(p["transferred"])
+    cross = int(p["cross_shard_transferred"])
+    out.update({
+        "mean_response": float(p["resp_sum"]) / completed,
+        "p50_response": _hist_percentile(p["resp_hist"], 50.0, hist_max,
+                                         resp_max),
+        "p95_response": _hist_percentile(p["resp_hist"], 95.0, hist_max,
+                                         resp_max),
+        "max_response": resp_max,
+        "transferred_frac": transferred / completed,
+        "cross_shard_transferred": cross,
+        "intra_fleet_transferred": transferred - cross,
+        "cross_shard_frac": cross / max(transferred, 1),
+        "cross_shard_completed": int(p["cross_shard_completed"]),
+        "per_edge_completed": {int(e): int(c)
+                               for e, c in enumerate(p["per_edge_completed"])
+                               if c},
+        "makespan": float(p["makespan"]),
+    })
+    if slo is not None and "slo_violations" in p:
+        violations = int(p["slo_violations"]) + shed + dropped + stranded
+        out["slo"] = float(slo)
+        out["slo_violation_frac"] = violations / max(submitted, 1)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # built-in assign functions (all jit/vmap-safe)
 # ---------------------------------------------------------------------------
@@ -558,7 +733,7 @@ def greedy_assign(key, inst):
     del key
     num_edges = inst["w"].shape[-1]
     sizes, rmask = inst["req_size"], inst["req_mask"]
-    order = jnp.argsort(jnp.where(rmask, -sizes, jnp.inf))
+    order = stable_order(jnp.where(rmask, -sizes, jnp.inf))
     cur0 = inst["req_src"].astype(jnp.int32)
 
     def body(cur, z):

@@ -267,17 +267,30 @@ def evaluate_slo(fastpath: DecisionFastPath, insts: Sequence[dict],
     """Drive the fast path over a workload and check the SLO contract.
 
     Replays ``insts`` through :meth:`DecisionFastPath.decide` (after
-    ``warmup_rounds`` unmeasured passes over the first instance to absorb
-    compilation), then evaluates ``slo`` on the recorded wall latencies.
-    Returns the :meth:`SLOSpec.check` report plus bucket/compile metadata.
+    warming exactly the padding buckets the workload will hit, plus
+    ``warmup_rounds`` unmeasured decide passes per hit bucket to absorb
+    dispatch-path warmup), then evaluates ``slo`` on the recorded wall
+    latencies. Returns the :meth:`SLOSpec.check` report plus
+    bucket/compile metadata.
     """
     if not insts:
         raise ValueError("evaluate_slo needs at least one instance")
-    if not fastpath.compile_ms:
-        fastpath.warmup()
+    # Warm exactly the buckets this workload routes to. The old gate
+    # ("skip warmup when any compile_ms entry exists") meant a partial
+    # warmup([...]) suppressed warmup entirely, so the first decision in a
+    # still-cold bucket paid its compilation inside a measured SLO sample.
+    first_in_bucket: dict[tuple[int, int], dict] = {}
+    for inst in insts:
+        q = int(np.shape(inst["edge_mask"])[-1])
+        z = int(np.shape(inst["req_mask"])[-1])
+        first_in_bucket.setdefault(fastpath.bucket_for(q, z), inst)
+    cold = [b for b in first_in_bucket if b not in fastpath.compile_ms]
+    if cold:
+        fastpath.warmup(cold)
     before = len(fastpath.latencies_ms)
-    for _ in range(warmup_rounds):
-        fastpath.decide(insts[0])
+    for inst in first_in_bucket.values():
+        for _ in range(warmup_rounds):
+            fastpath.decide(inst)
     del fastpath.latencies_ms[before:]
     for inst in insts:
         fastpath.decide(inst)

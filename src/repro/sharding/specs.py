@@ -228,3 +228,37 @@ def cache_specs(cache_tree, cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
 
 def replicated(tree, mesh: Mesh):
     return jax.tree.map(lambda x: NamedSharding(mesh, P(*(None,) * x.ndim)), tree)
+
+
+# ---------------------------------------------------------------------------
+# rollout-engine fleet sharding (repro.serving.fleet)
+# ---------------------------------------------------------------------------
+
+
+def _leading_axis_spec(x, axis) -> P:
+    nd = getattr(x, "ndim", 0)
+    if nd == 0:
+        raise ValueError(
+            "fleet sharding needs a leading instance axis on every leaf; "
+            "got a scalar — batch the pytree first (engine.init_batch / "
+            "workloads.materialize_round_batch)")
+    return P(axis, *(None,) * (nd - 1))
+
+
+def engine_state_specs(state, axis: str = "fleet"):
+    """``shard_map`` PartitionSpecs for a batched engine ``SimState`` pytree
+    (:func:`repro.serving.engine.init_batch`): every leaf carries a leading
+    (B,) instance axis — shard it over ``axis`` and replicate everything
+    trailing. Instances are independent clusters, so per-instance state
+    never crosses shards; only summary partials do (via psum in
+    ``serving.fleet``)."""
+    return jax.tree.map(lambda x: _leading_axis_spec(x, axis), state)
+
+
+def arrival_specs(arrivals, axis: str = "fleet"):
+    """PartitionSpecs for batched (B, R, A) arrival tensors
+    (:func:`repro.workloads.batch.materialize_round_batch`) — and for any
+    other per-instance leading-axis input of a fleet rollout ((B, 2) PRNG
+    keys, (B,) displacement flags): shard the instance axis, replicate the
+    rest."""
+    return jax.tree.map(lambda x: _leading_axis_spec(x, axis), arrivals)

@@ -45,7 +45,19 @@ def _bucketize(workload: Workload, num_edges: int, num_rounds: int,
         if not 0 <= a.edge < num_edges:
             raise ValueError(f"arrival at t={a.t} targets edge {a.edge}, "
                              f"outside 0..{num_edges - 1}")
+        # Round windows are (r*dt, (r+1)*dt] over (0, until]; an arrival
+        # outside them has no round to fire in, and silently clamping it
+        # into row 0 / row R-1 would rewrite its submit time's window (the
+        # engine would schedule it rounds away from when it arrived).
+        if not 0 < a.t <= until:
+            raise ValueError(
+                f"arrival at t={a.t} falls outside the scheduling horizon "
+                f"(0, {until}] covered by {num_rounds} round(s) of "
+                f"{round_interval}; generators must emit 0 < t <= until")
         row = int(np.ceil(a.t / round_interval)) - 1  # window (r*dt, (r+1)*dt]
+        # clamp only against float rounding at the window edges (t == until
+        # ceil-ing one past R-1, denormal t flooring to -1) — real
+        # out-of-horizon arrivals were rejected above
         row = min(max(row, 0), num_rounds - 1)
         buckets[row].append((a.t, a.edge, a.size, rid))
         rid += 1

@@ -1,0 +1,99 @@
+"""Child process for tests/test_fleet_multidevice.py — needs 8 host
+devices, which must be forced before jax initializes (subprocess, same
+pattern as multidevice_child.py).
+
+Pins the fleet-sharded rollout to the single-device vmap engine: the same
+(states, arrivals, keys) batch through ``make_rollout(batch=True)`` +
+``summarize_partials`` on one device and through ``make_fleet_rollout``
+over an 8-shard ("fleet",) mesh must produce the same summary — counts
+and histograms exactly, float reductions to 1e-5."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_fleet_mesh
+from repro.serving import (EngineConfig, apply_partition, init_batch,
+                           make_fleet_rollout, make_rollout,
+                           partials_to_summary, summarize,
+                           summarize_partials, zipf_partition)
+from repro.serving.engine import greedy_assign
+from repro.workloads import materialize_round_batch, scenario
+
+Q, ROUNDS, DT, B, SHARDS = 5, 8, 0.25, 16, 8
+
+
+def check_fleet_matches_vmap_engine():
+    assert len(jax.devices()) == 8, jax.devices()
+    arr = materialize_round_batch(scenario("uniform_iid"), Q, ROUNDS, DT, B,
+                                  base_seed=0)
+    cfg = EngineConfig(num_edges=Q, num_rounds=ROUNDS, round_interval=DT,
+                      max_per_round=arr["mask"].shape[-1])
+    states = init_batch(cfg, range(B))
+    keys = np.asarray(jax.random.split(jax.random.PRNGKey(0), B))
+    part = zipf_partition(B, SHARDS, skew=0.9, seed=1)
+    displaced = part.placed_displaced
+
+    # single-device vmap reference (device 0), same placement order so the
+    # cross-shard accounting matches too
+    run = make_rollout(cfg, greedy_assign, batch=True)
+    final, _ = run(apply_partition(part, states), apply_partition(part, arr),
+                   apply_partition(part, keys))
+    ref = partials_to_summary(summarize_partials(final, displaced=displaced))
+    exact = summarize(final)  # classic full-slot-table path, count cross-check
+
+    mesh = make_fleet_mesh()
+    assert dict(mesh.shape) == {"fleet": SHARDS}, mesh
+    frun = make_fleet_rollout(cfg, greedy_assign, mesh)
+    got = partials_to_summary(
+        frun(apply_partition(part, states), apply_partition(part, arr),
+             apply_partition(part, keys), displaced))
+
+    assert got["completed"] == ref["completed"] == exact["completed"] > 0
+    assert got["submitted"] == ref["submitted"] == exact["submitted"]
+    for k in ("stranded_requests", "retried_requests", "displaced_instances",
+              "cross_shard_transferred", "intra_fleet_transferred",
+              "cross_shard_completed", "per_edge_completed"):
+        assert got[k] == ref[k], (k, got[k], ref[k])
+    assert got["per_edge_completed"] == {
+        e: c for e, c in exact["per_edge_completed"].items() if c}
+    for k in ("mean_response", "max_response", "makespan",
+              "transferred_frac", "p50_response", "p95_response"):
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-5, atol=1e-7,
+                                   err_msg=k)
+    # the skewed partition really displaced someone, so the cross-shard
+    # split is exercised, not vacuously zero
+    assert got["displaced_instances"] > 0
+    assert got["cross_shard_transferred"] > 0
+    print("fleet==vmap summaries ok", got["completed"], got["mean_response"])
+
+
+def check_subset_mesh_scaling_shards():
+    """2-shard subset mesh on the same 8-device host also agrees (the
+    scaling-curve path in benchmarks/rollout_throughput.py --fleet)."""
+    arr = materialize_round_batch(scenario("uniform_iid"), Q, ROUNDS, DT, B,
+                                  base_seed=3)
+    cfg = EngineConfig(num_edges=Q, num_rounds=ROUNDS, round_interval=DT,
+                      max_per_round=arr["mask"].shape[-1])
+    states = init_batch(cfg, range(B))
+    keys = np.asarray(jax.random.split(jax.random.PRNGKey(3), B))
+    run = make_rollout(cfg, greedy_assign, batch=True)
+    final, _ = run(states, arr, keys)
+    ref = partials_to_summary(summarize_partials(final))
+
+    mesh2 = make_fleet_mesh(2)
+    got = partials_to_summary(
+        make_fleet_rollout(cfg, greedy_assign, mesh2)(states, arr, keys))
+    assert got["completed"] == ref["completed"]
+    np.testing.assert_allclose(got["mean_response"], ref["mean_response"],
+                               rtol=1e-5)
+    assert got["p95_response"] == ref["p95_response"]
+    print("2-shard subset mesh ok", got["completed"])
+
+
+if __name__ == "__main__":
+    check_fleet_matches_vmap_engine()
+    check_subset_mesh_scaling_shards()
+    print("FLEET_MULTIDEVICE_OK")

@@ -145,6 +145,24 @@ def test_evaluate_slo_report_structure(policy):
         assert rep[f"p{p}_ms"] > 0 and rep[f"p{p}_slo_ms"] == 1e4
 
 
+def test_evaluate_slo_warms_cold_buckets_after_partial_warmup(policy):
+    """A partial warmup must not suppress warming the buckets the workload
+    actually hits: previously any non-empty compile_ms skipped warmup
+    entirely, so the first decision in a cold bucket paid jit compilation
+    inside a measured SLO sample."""
+    params, state = policy
+    fp = DecisionFastPath(params, state, CFG, buckets=((8, 32), (16, 64)))
+    fp.warmup([(8, 32)])  # partial: the workload's bucket stays cold
+    insts = [_inst(12, 50, s) for s in range(3)]  # all land in (16, 64)
+    rep = evaluate_slo(fp, insts, SLOSpec(1e4, 1e4, 1e4))
+    # the hit bucket was compiled before measurement started...
+    assert (16, 64) in fp.compile_ms
+    # ...only the workload decisions were measured...
+    assert rep["samples"] == len(insts)
+    # ...and no measured sample contains the (16, 64) compile
+    assert rep["p95_ms"] < fp.compile_ms[(16, 64)]
+
+
 # -- drift-check schema compatibility ----------------------------------------
 
 
@@ -218,3 +236,34 @@ def test_drift_write_baseline_roundtrip(tmp_path):
     assert len(payload["cells"]) == 3
     assert {c["stage"] for c in payload["cells"]} == {"decision", "head"}
     assert drift.check(str(rp), str(bp), factor=4.0, floor_ms=0.0) == 0
+
+
+def test_drift_check_fails_on_missing_baseline_cells(tmp_path, capsys):
+    """Baseline cells absent from the fresh report fail the gate by default
+    (a dropped grid point or renamed backend must not pass silently) and
+    are listed; --allow-missing opts out for intentional grid shrinks."""
+    drift = _load_drift_module()
+    report = {"schema": "corais.policy_latency.v2",
+              "cells": [_v2_cell("pallas", 5, 20, "decision", "host", 1.0)]}
+    base = {"schema": "corais.policy_latency_baseline.v2",
+            "cells": [{"backend": "pallas", "num_edges": 5,
+                       "num_requests": 20, "stage": "decision",
+                       "decode": "host", "p95_ms": 1.0},
+                      {"backend": "xla", "num_edges": 100,
+                       "num_requests": 1000, "stage": "decision",
+                       "decode": "host", "p95_ms": 2.0}]}
+    rp, bp = tmp_path / "r.json", tmp_path / "b.json"
+    rp.write_text(json.dumps(report))
+    bp.write_text(json.dumps(base))
+    assert drift.check(str(rp), str(bp), factor=4.0, floor_ms=0.0) == 1
+    out = capsys.readouterr().out
+    assert "MISSING" in out and "xla" in out
+    assert drift.check(str(rp), str(bp), factor=4.0, floor_ms=0.0,
+                       allow_missing=True) == 0
+    # a regression in a common cell still fails even with allow_missing
+    slow = {"schema": "corais.policy_latency.v2",
+            "cells": [_v2_cell("pallas", 5, 20, "decision", "host", 99.0)]}
+    sp = tmp_path / "s.json"
+    sp.write_text(json.dumps(slow))
+    assert drift.check(str(sp), str(bp), factor=4.0, floor_ms=0.0,
+                       allow_missing=True) == 1

@@ -1,0 +1,172 @@
+"""Fleet sharding, host level: Zipf partition balance/displacement, the
+mergeable summary partials vs the classic ``summarize`` path, fleet rollout
+on a single-device mesh, the sort-free ``stable_order``, and mesh
+construction errors.
+
+The real multi-device equivalence (8 forced host devices, psum-reduced
+partials vs the vmap engine) runs as a subprocess in
+tests/test_fleet_multidevice.py; everything here stays on the plain
+single-device test process."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_fleet_mesh, make_host_mesh
+from repro.serving import (EngineConfig, apply_partition, fleet_summary,
+                           init_batch, make_fleet_rollout, make_rollout,
+                           partials_to_summary, summarize, summarize_partials,
+                           zipf_partition)
+from repro.serving import engine
+from repro.workloads import materialize_round_batch, scenario
+
+Q, ROUNDS, DT, B = 4, 6, 0.25, 8
+
+
+def _batch(seed=0):
+    arr = materialize_round_batch(scenario("uniform_iid"), Q, ROUNDS, DT, B,
+                                  base_seed=seed)
+    cfg = EngineConfig(num_edges=Q, num_rounds=ROUNDS, round_interval=DT,
+                       max_per_round=arr["mask"].shape[-1])
+    keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed), B))
+    return cfg, init_batch(cfg, range(B)), arr, keys
+
+
+# -- stable_order (the shard_map-safe argsort) --------------------------------
+
+
+def test_stable_order_matches_stable_argsort():
+    """Rank-by-comparison must be bit-identical to stable argsort,
+    including ties and the INF padding the lane scan relies on."""
+    rng = np.random.default_rng(0)
+    for keys in (
+        rng.standard_normal(104).astype(np.float32),
+        np.where(rng.random(64) < 0.5, engine.INF,
+                 rng.random(64)).astype(np.float32),
+        np.repeat(rng.standard_normal(8), 8).astype(np.float32),  # ties
+        np.full(16, engine.INF, np.float32),
+        np.zeros(1, np.float32),
+    ):
+        got = np.asarray(engine.stable_order(jnp.asarray(keys)))
+        want = np.argsort(keys, kind="stable")
+        np.testing.assert_array_equal(got, want)
+
+
+# -- Zipf partition -----------------------------------------------------------
+
+
+def test_zipf_partition_balances_skewed_homes():
+    part = zipf_partition(64, 8, skew=1.2, seed=0)
+    # placement is capacity-balanced: exactly B/S instances per shard
+    assert np.bincount(part.shard, minlength=8).tolist() == [8] * 8
+    # the placement order groups shards into contiguous blocks
+    assert (np.diff(part.shard[part.order]) >= 0).all()
+    rep = part.imbalance_report()
+    assert rep["capacity"] == 8
+    assert sum(rep["home_load"]) == sum(rep["placed_load"]) == 64
+    # Zipf homes are skewed; the balancer flattens them
+    assert rep["home_imbalance"] > 1.1
+    assert rep["placed_imbalance"] == pytest.approx(1.0)
+    # skew displaced someone, and the two displaced views agree
+    assert 0 < rep["displaced_instances"] == part.displaced.sum()
+    assert part.placed_displaced.sum() == part.displaced.sum()
+
+
+def test_zipf_partition_rejects_indivisible_batch():
+    with pytest.raises(ValueError, match="equal blocks"):
+        zipf_partition(10, 4)
+
+
+def test_apply_partition_reorders_leading_axis():
+    part = zipf_partition(8, 2, skew=1.0, seed=2)
+    tree = {"a": np.arange(8), "b": np.arange(16).reshape(8, 2)}
+    out = apply_partition(part, tree)
+    np.testing.assert_array_equal(out["a"], np.arange(8)[part.order])
+    np.testing.assert_array_equal(out["b"],
+                                  np.arange(16).reshape(8, 2)[part.order])
+
+
+# -- summary partials ---------------------------------------------------------
+
+
+def test_partials_match_classic_summarize():
+    """The mergeable partials must reproduce the classic full-slot-table
+    ``summarize`` on the same final state: counts exactly, float metrics
+    to float32 tolerance, percentiles to one histogram bin."""
+    cfg, states, arr, keys = _batch()
+    run = make_rollout(cfg, engine.greedy_assign, batch=True)
+    final, _ = run(states, arr, keys)
+    want = summarize(final)
+    got = partials_to_summary(summarize_partials(final))
+    for k in ("completed", "submitted", "shed_requests", "dropped_requests",
+              "stranded_requests", "retried_requests"):
+        assert got[k] == want[k], k
+    assert got["per_edge_completed"] == {
+        e: c for e, c in want["per_edge_completed"].items() if c}
+    for k in ("mean_response", "max_response", "makespan",
+              "transferred_frac"):
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-5, err_msg=k)
+    bin_width = engine.HIST_MAX / engine.HIST_BINS
+    for k in ("p50_response", "p95_response"):
+        assert abs(got[k] - want[k]) <= bin_width, k
+    # no partition given: every transfer is intra-fleet
+    assert got["cross_shard_transferred"] == 0
+    assert got["intra_fleet_transferred"] == got["transferred_frac"] * \
+        got["completed"] == pytest.approx(want["transferred_frac"]
+                                          * want["completed"])
+
+
+def test_fleet_rollout_single_device_mesh_matches_vmap():
+    """On a 1-shard mesh the fleet path (shard_map + psum reduction) must
+    reduce to exactly the vmap engine's summary, displaced accounting
+    included."""
+    cfg, states, arr, keys = _batch(seed=1)
+    part = zipf_partition(B, 1, seed=1)  # 1 shard: nobody displaced
+    run = make_rollout(cfg, engine.greedy_assign, batch=True)
+    final, _ = run(states, arr, keys)
+    ref = partials_to_summary(summarize_partials(final))
+
+    mesh = make_fleet_mesh()
+    frun = make_fleet_rollout(cfg, engine.greedy_assign, mesh)
+    got = fleet_summary(frun(states, arr, keys, part.placed_displaced))
+    assert got["completed"] == ref["completed"] > 0
+    assert got["displaced_instances"] == 0
+    for k in ("mean_response", "p50_response", "p95_response",
+              "max_response", "makespan"):
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-6, err_msg=k)
+    assert got["per_edge_completed"] == ref["per_edge_completed"]
+
+
+def test_fleet_rollout_rejects_indivisible_batch():
+    """A batch that does not divide over the fleet axis fails loudly before
+    any device work (shard_map would otherwise crash opaquely)."""
+    cfg, states, arr, keys = _batch()
+    mesh3 = types.SimpleNamespace(shape={"fleet": 3})  # B=8 % 3 != 0
+    frun = make_fleet_rollout(cfg, engine.greedy_assign, mesh3)
+    with pytest.raises(ValueError, match="does not divide"):
+        frun(states, arr, keys)
+
+
+# -- mesh construction --------------------------------------------------------
+
+
+def test_make_host_mesh_rejects_bad_model_parallel():
+    """The indivisible-device-count failure is a ValueError naming both
+    numbers (it was a bare assert, which vanishes under python -O)."""
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match=rf"{n} available device\(s\)"):
+        make_host_mesh(model_parallel=n * 2)
+    with pytest.raises(ValueError, match="model_parallel=0"):
+        make_host_mesh(model_parallel=0)
+
+
+def test_make_fleet_mesh_bounds():
+    n = len(jax.devices())
+    assert dict(make_fleet_mesh().shape) == {"fleet": n}
+    assert dict(make_fleet_mesh(n).shape) == {"fleet": n}
+    with pytest.raises(ValueError, match="fleet mesh"):
+        make_fleet_mesh(n + 1)
+    with pytest.raises(ValueError, match="fleet mesh"):
+        make_fleet_mesh(0)

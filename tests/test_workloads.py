@@ -349,3 +349,38 @@ def test_controller_remaps_dead_source_to_nearest_alive():
     (scheduled,) = sim.cc.schedule(sim.edges, [req], sim.w, ct=1.0)
     assert scheduled[0] is req
     assert scheduled[1] == 2  # nearest alive, not the old alive-index-0 bias
+
+
+# -- round bucketing horizon validation --------------------------------------
+
+class _ScriptedArrivals:
+    """Fixed arrival times, all on edge 0 (for bucketing-window tests)."""
+
+    def __init__(self, ts):
+        self.ts = ts
+
+    def arrivals(self, rng, num_edges, until):
+        from repro.workloads import Arrival
+        for t in self.ts:
+            yield Arrival(t=t, edge=0, size=1.0)
+
+
+def test_materialize_rejects_out_of_horizon_arrivals():
+    """Round windows are (r*dt, (r+1)*dt]: t == 0 and t > until have no
+    round to fire in and must raise, not be silently clamped into round 0
+    or R-1 (the clamp rewrote the arrival's scheduling window)."""
+    from repro.workloads.batch import materialize_rounds
+    with pytest.raises(ValueError, match="outside the scheduling horizon"):
+        materialize_rounds(_ScriptedArrivals([0.0]), 2, 4, 0.25)
+    with pytest.raises(ValueError, match="outside the scheduling horizon"):
+        materialize_rounds(_ScriptedArrivals([1.25]), 2, 4, 0.25)  # > until
+
+
+def test_materialize_boundary_arrivals_land_in_their_window():
+    """t == until is the last valid instant (closed upper edge of round
+    R-1's window); exact round boundaries r*dt belong to round r-1."""
+    from repro.workloads.batch import materialize_rounds
+    arr = materialize_rounds(_ScriptedArrivals([0.25, 0.5, 1.0]), 2, 4, 0.25)
+    assert arr["mask"][0].sum() == 1 and arr["t"][0][0] == 0.25
+    assert arr["mask"][1].sum() == 1 and arr["t"][1][0] == 0.5
+    assert arr["mask"][3].sum() == 1 and arr["t"][3][0] == 1.0  # t == until
