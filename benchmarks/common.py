@@ -191,6 +191,80 @@ def get_resilient_policy(en: int = 5, batches: int = 300,
     return params, state, cfg
 
 
+def get_cloud_policy(en: int = 5, batches: int = 300,
+                     d_model: int = POLICY_DIM,
+                     scenario_name: str = "cloud-cache-churn",
+                     deadline_penalty: float = 8.0, verbose: bool = True):
+    """Train (or load cached) the deadline/cache-aware CoRaiS policy for an
+    edge-cloud scenario — the ``batched-corais-cloud`` column of the
+    scenario sweep.
+
+    Tier features are on (``PolicyConfig(tier_features=True)``: per-node
+    tier + cache occupancy, per-request slack / priority / cached-bit) and
+    the episode cost adds ``deadline_penalty * deadline_miss_frac``, so
+    temporal REINFORCE on the scenario's own rollouts (temporal_train
+    threads the registered CloudSpec/CacheSpec into the engine) trains
+    dispatch to trade response time against deadline misses with the cache
+    and WAN-RTT state visible.
+
+    The dispatch weights warm-start from the static-trained flat-tier
+    policy: the extra tier/deadline rows of the edge/request projections
+    start at zero, so at batch 0 the policy scores nodes exactly like the
+    cache-oblivious ``batched-corais`` column and training only has to
+    learn what the new features add."""
+    import jax.numpy as jnp
+
+    from repro.core.policy import EDGE_FEATURES, REQ_FEATURES, corais_init
+    from repro.core.train import TemporalRLConfig, temporal_train
+    from repro.serving.engine import EngineConfig
+
+    cfg = TemporalRLConfig(
+        policy=PolicyConfig(d_model=d_model, tier_features=True),
+        # deadline-heavy scenarios burst past the default admission width
+        engine=EngineConfig(num_edges=en, max_per_round=64),
+        scenario=scenario_name,
+        batch_size=8,
+        lr=1e-3,
+        num_batches=batches,
+        seed=0,
+        deadline_penalty=deadline_penalty,
+    )
+    tag = f"policy_cloud_en{en}_d{d_model}_b{batches}_{scenario_name}"
+    ckpt = Checkpointer(os.path.join(RESULTS, tag), every=10**9,
+                        async_save=False)
+    template = jax.eval_shape(
+        lambda: corais_init(jax.random.PRNGKey(cfg.seed), cfg.policy))
+    restored = ckpt.restore_latest({"params": template[0],
+                                    "state": template[1]})
+    if restored is not None:
+        if verbose:
+            print(f"# loaded cached cloud policy {tag}")
+        return restored["tree"]["params"], restored["tree"]["state"], cfg
+
+    sparams, sstate, _ = get_trained_policy(en, 50, 800, d_model=d_model,
+                                            verbose=verbose)
+    fresh, _ = corais_init(jax.random.PRNGKey(cfg.seed), cfg.policy)
+    params = dict(sparams)
+    for key, base in (("edge_proj", EDGE_FEATURES),
+                      ("req_proj", REQ_FEATURES)):
+        w = jnp.zeros_like(fresh[key]["w"]).at[:base].set(sparams[key]["w"])
+        params[key] = {"w": w, "b": sparams[key]["b"]}
+    state = sstate
+
+    t0 = time.time()
+    cb = (lambda m: print(f"#   batch {m['batch']} cost {m['cost_mean']:.3f} "
+                          f"dl_miss {m.get('deadline_miss_frac', 0.0):.3f}")) \
+        if verbose else None
+    params, state, _, hist = temporal_train(cfg, params=params, state=state,
+                                            callback=cb)
+    if verbose:
+        print(f"# cloud-trained {batches} batches in {time.time()-t0:.0f}s "
+              f"(cost {hist[0]['cost_mean']:.3f} -> {hist[-1]['cost_mean']:.3f})")
+    ckpt.save(batches, {"params": params, "state": state})
+    ckpt.wait()
+    return params, state, cfg
+
+
 def eval_instances(en: int, rn: int, n: int, seed: int = 999):
     rng = np.random.default_rng(seed)
     from repro.core import generate_instance

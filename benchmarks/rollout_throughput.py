@@ -151,9 +151,9 @@ def bench_fleet(name: str, backend: str, num_edges: int, rounds: int,
         "completed": m["completed"],
         "request_rounds": request_rounds,
         "request_rounds_per_s": request_rounds / max(wall, 1e-12),
-        "cross_shard_transferred": m.get("cross_shard_transferred", 0),
-        "intra_fleet_transferred": m.get("intra_fleet_transferred", 0),
-        "cross_shard_frac": m.get("cross_shard_frac", 0.0),
+        "cross_shard_transferred": m["cross_shard_transferred"],
+        "intra_fleet_transferred": m["intra_fleet_transferred"],
+        "cross_shard_frac": m["cross_shard_frac"],
         "imbalance": part.imbalance_report(),
     }
 

@@ -40,6 +40,21 @@ adds under overload and failures).
 
   # resilience fault matrix (writes results/chaos_sweep.json):
   PYTHONPATH=src python benchmarks/scenario_sweep.py --chaos
+
+Edge-cloud scenarios (``cloud-*``, any scenario registered with a
+CloudSpec) run with the elastic cloud tier and per-edge service caches
+threaded into both engines, and their cells carry deadline-miss /
+cache-hit / cloud-offload columns plus a per-scenario deadline winner.
+The extra column is ``batched-corais-cloud``: the tier-feature policy
+temporal-trained against deadline misses on the miss-heavy
+cloud-cache-churn scenario (benchmarks.common.get_cloud_policy) and
+reused unchanged on every other scenario, so against ``batched-corais``
+(cache-oblivious dispatch) and ``batched-greedy`` it isolates what the
+deadline/cache/tier features buy:
+
+  PYTHONPATH=src python benchmarks/scenario_sweep.py \\
+      --scenarios cloud-cache-churn,cloud-burst-offload \\
+      --backends batched-greedy,batched-corais,batched-corais-cloud
 """
 from __future__ import annotations
 
@@ -64,9 +79,9 @@ from repro.serving import (ASSIGN_FNS, CentralController, EngineConfig,
                            make_rollout, resolve_assign_fn, summarize)
 from repro.workloads import (list_scenarios, materialize_round_batch,
                              materialize_rounds, scenario,
-                             scenario_fault_spec)
+                             scenario_cloud_spec, scenario_fault_spec)
 
-REPORT_SCHEMA = "corais.scenario_sweep.v2"
+REPORT_SCHEMA = "corais.scenario_sweep.v3"
 DEFAULT_SLO = 3.0  # response-time SLO for the fault-matrix columns
 
 
@@ -89,9 +104,14 @@ def _make_controller(backend: str, num_edges: int, batches: int,
 #: batched-local on paired episodes), and corais-admit — the same
 #: static-trained dispatch plus an admission head trained per scenario on
 #: fault-injected episodes (frozen dispatch, so the column isolates what
-#: admission adds).
+#: admission adds). corais-cloud is the deadline/cache-aware variant:
+#: tier features on, temporal-trained against deadline misses on
+#: cloud-cache-churn (benchmarks.common.get_cloud_policy, one shared
+#: column), so on cloud-* scenarios its cell against batched-corais
+#: isolates what the tier/cache/deadline features buy over the
+#: cache-oblivious dispatch.
 POLICY_BACKENDS = ("corais", "corais-sample", "corais-temporal", "policy",
-                   "corais-admit")
+                   "corais-admit", "corais-cloud")
 
 
 def _engine_assign_fn(inner: str, num_edges: int, batches: int,
@@ -105,6 +125,19 @@ def _engine_assign_fn(inner: str, num_edges: int, batches: int,
                 num_edges, scenario_name=scenario_name,
                 slo=DEFAULT_SLO, verbose=False)
             mode = "greedy"
+        elif inner == "corais-cloud":
+            # one shared column: the policy temporal-trained on
+            # cloud-cache-churn (the miss-heavy scenario), reused on the
+            # other scenarios so its cloud-burst-offload cell doubles as
+            # a generalization check rather than retraining per scenario.
+            # Sampled decode: episode REINFORCE trains the stochastic
+            # policy, and per-round queue depth is not a request feature,
+            # so argmax herds a round's identical-looking requests onto
+            # one node — sampling realizes the load-spreading mixture the
+            # training signal actually scored.
+            from benchmarks.common import get_cloud_policy
+            params, state, cfg = get_cloud_policy(num_edges, verbose=False)
+            mode = "sample"
         elif inner == "corais-temporal":
             from benchmarks.common import get_temporal_policy
             params, state, cfg = get_temporal_policy(num_edges, batches,
@@ -142,9 +175,11 @@ def _run_batched(backend: str, name: str, *, num_edges: int, until: float,
     if fspec is not None:
         arrivals = faults_lib.attach_fault_batch(arrivals, fspec, num_edges,
                                                  seeds=[seed])
+    cloud, cache = scenario_cloud_spec(name)
     cfg = EngineConfig(num_edges=num_edges, num_rounds=rounds,
                        round_interval=interval, learn_phi=True,
-                       max_per_round=arrivals["mask"].shape[-1])
+                       max_per_round=arrivals["mask"].shape[-1],
+                       cloud=cloud, cache=cache)
     state0 = init_batch(cfg, [seed])
     run = make_rollout(cfg, _engine_assign_fn(inner, num_edges, batches, name),
                        batch=True)
@@ -171,7 +206,9 @@ def _run_event_driven(backend: str, name: str, *, num_edges: int,
     fail/recover/straggle timeline the batched cells fold into their
     arrival batch is scheduled into the heap, so the columns stay paired."""
     cc = _make_controller(backend, num_edges, batches, z_pad=256)
-    sim = MultiEdgeSim(SimConfig(num_edges=num_edges, seed=seed), cc)
+    cloud, cache = scenario_cloud_spec(name)
+    sim = MultiEdgeSim(SimConfig(num_edges=num_edges, seed=seed,
+                                 cloud=cloud, cache=cache), cc)
     interval = sim.cfg.round_interval
     fspec = scenario_fault_spec(name)
     if fspec is not None:
@@ -216,6 +253,7 @@ def run_sweep(scenarios: list[str], backends: list[str], *, num_edges: int = 5,
     cells = {}
     winners = {}
     slo_winners = {}
+    deadline_winners = {}
     for name in scenarios:
         cells[name] = {}
         fspec = scenario_fault_spec(name)
@@ -228,25 +266,32 @@ def run_sweep(scenarios: list[str], backends: list[str], *, num_edges: int = 5,
                 m = _run_event_driven(backend, name, num_edges=num_edges,
                                       until=until, horizon=horizon,
                                       seed=seed, batches=batches, slo=slo)
+            # every cell — batched summarize/partials_to_summary and the
+            # event sim's metrics() — now returns the full canonical
+            # SUMMARY_KEYS schema, so the report indexes keys directly
+            # instead of defaulting the ones an engine used to omit
             m["per_edge_completed"] = {str(k): v for k, v
-                                       in m.get("per_edge_completed",
-                                                {}).items()}
+                                       in m["per_edge_completed"].items()}
             cells[name][backend] = m
             if verbose:
                 line = (f"  {name:20s} {backend:12s} completed="
                         f"{m['completed']:4d}/{m['submitted']:<4d} "
-                        f"mean={m.get('mean_response', 0):7.3f} "
-                        f"p95={m.get('p95_response', 0):7.3f} "
+                        f"mean={m['mean_response']:7.3f} "
+                        f"p95={m['p95_response']:7.3f} "
                         f"dec_mean={m['decision_mean_s'] * 1e3:6.2f}ms")
                 if "slo_violation_frac" in m:
-                    line += (f" shed={m.get('shed_rate', 0.0):5.3f} "
+                    line += (f" shed={m['shed_rate']:5.3f} "
                              f"slo_viol={m['slo_violation_frac']:5.3f}")
+                if m["deadline_total"]:
+                    line += (f" dl_miss={m['deadline_miss_frac']:5.3f} "
+                             f"cache_hit={m['cache_hit_rate']:5.3f} "
+                             f"cloud={m['cloud_offload_frac']:5.3f}")
                 print(line)
         # fault-free scenarios rank complete runs by mean response; fault
         # scenarios admit shed/dropped load, so rank everything that
         # completed work (and additionally by SLO-violation fraction)
         ok = {b: r for b, r in cells[name].items()
-              if r.get("completed", 0) > 0
+              if r["completed"] > 0
               and (fspec is not None or r["completed"] == r["submitted"])}
         if ok:
             winners[name] = min(ok, key=lambda b: ok[b]["mean_response"])
@@ -260,6 +305,18 @@ def run_sweep(scenarios: list[str], backends: list[str], *, num_edges: int = 5,
             if verbose:
                 print(f"  {name:20s} -> best SLO violation:  "
                       f"{slo_winners[name]}")
+        # deadline-carrying scenarios (cloud-*) additionally rank by
+        # deadline-miss fraction — the edge-cloud counterpart of the SLO
+        # column, ties broken by mean response
+        dl_ok = {b: r for b, r in cells[name].items()
+                 if r["completed"] > 0 and r["deadline_total"] > 0}
+        if dl_ok:
+            deadline_winners[name] = min(
+                dl_ok, key=lambda b: (dl_ok[b]["deadline_miss_frac"],
+                                      dl_ok[b]["mean_response"]))
+            if verbose:
+                print(f"  {name:20s} -> best deadline miss:  "
+                      f"{deadline_winners[name]}")
     return {
         "schema": REPORT_SCHEMA,
         "config": {"num_edges": num_edges, "until": until,
@@ -268,6 +325,7 @@ def run_sweep(scenarios: list[str], backends: list[str], *, num_edges: int = 5,
         "results": cells,
         "winners": winners,
         "slo_winners": slo_winners,
+        "deadline_winners": deadline_winners,
     }
 
 

@@ -6,7 +6,8 @@ from repro.core.policy import (SCORE_BACKENDS, PolicyConfig, corais_apply,
                                corais_encode, corais_init, corais_score,
                                list_score_backends, register_score_backend)
 from repro.core.decode import greedy_decode, sampling_decode, assignment_log_prob
-from repro.core.inference import make_decision_fn, make_policy_assign, policy_decide
+from repro.core.inference import (DecisionSpec, make_decision_fn,
+                                  make_policy_assign, policy_decide)
 from repro.core.train import RLConfig, make_train_step, train
 from repro.core.ablations import variant_config
 from repro.core.state import EdgeServiceState, PhiEstimator, QueuedRequest, snapshot_instance
@@ -17,7 +18,7 @@ __all__ = [
     "PolicyConfig", "corais_apply", "corais_init",
     "corais_encode", "corais_score", "SCORE_BACKENDS",
     "register_score_backend", "list_score_backends",
-    "make_decision_fn", "make_policy_assign", "policy_decide",
+    "DecisionSpec", "make_decision_fn", "make_policy_assign", "policy_decide",
     "greedy_decode", "sampling_decode", "assignment_log_prob",
     "RLConfig", "make_train_step", "train",
     "variant_config",

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import instances as inst_lib
 from repro.core.heuristics import solve_ils, solve_local, solve_random
-from repro.core.inference import make_decision_fn
+from repro.core.inference import DecisionSpec, make_decision_fn
 from repro.core.objective import makespan_np
 from repro.core.policy import PolicyConfig
 from repro.serving import engine as engine_lib
@@ -33,8 +33,9 @@ def _policy_method(params, state, cfg: PolicyConfig, mode: str, n: int,
     """Returns fn(inst) -> (assign, solve_time). The shared decision path
     (core.inference) jits once and is reused across instances of identical
     padded shape (the paper's real-time setting)."""
-    decide = make_decision_fn(params, state, cfg, mode=mode, num_samples=n,
-                              backend=backend)
+    decide = make_decision_fn(params, state, cfg,
+                              DecisionSpec(mode=mode, num_samples=n,
+                                           backend=backend))
     key_holder = [jax.random.PRNGKey(seed)]
 
     def run(inst):
@@ -156,9 +157,9 @@ def evaluate_rollouts(
             name=name,
             completed=m["completed"],
             submitted=m["submitted"],
-            mean_response=m.get("mean_response", float("nan")),
-            p95_response=m.get("p95_response", float("nan")),
-            makespan=m.get("makespan", float("nan")),
+            mean_response=m["mean_response"],
+            p95_response=m["p95_response"],
+            makespan=m["makespan"],
             wall_s=wall,
             metrics=m,
         )

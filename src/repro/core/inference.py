@@ -7,6 +7,21 @@ scheduling decision the same way: one mask-invariant, fixed-shape forward
 decode (greedy argmax or best-of-n sampling). This module is that single
 path; nothing outside it re-implements "forward + decode".
 
+How a decision is configured — :class:`DecisionSpec`:
+
+    spec = DecisionSpec(mode="sample", num_samples=32, fused_decode=True)
+    policy_decide(key, params, state, inst, cfg, spec)
+    make_policy_assign(params, state, cfg, spec=spec)
+    make_decision_fn(params, state, cfg, spec=spec)
+
+One frozen dataclass holds every decode knob (mode, num_samples, backend,
+admission, fused_decode, num_candidates, normalize); all entry points, the
+serving fast path (``serving/fastpath.py``), and the controller consume it.
+The pre-spec keyword flags (``policy_decide(..., mode=, fused_decode=, ...)``)
+still work as a deprecated shim — they are folded into a DecisionSpec
+internally — but new code should build the spec once and pass it around.
+Passing both a spec and legacy keywords is an error.
+
 Two decode routes through the head:
 
     materialized (``fused_decode=False``) — :func:`corais_score` emits the
@@ -28,7 +43,8 @@ Three entry points, one semantics:
                         engine's per-round scheduler body)
     make_policy_assign— closure matching the engine's AssignFn signature
                         (registered as ``ASSIGN_FNS["policy"]``; the
-                        ``"policy-fused"`` entry defaults fused_decode on)
+                        ``"policy-fused"`` alias is the same factory with
+                        ``DecisionSpec(fused_decode=True)`` defaults)
     make_decision_fn  — jitted host-side decision function for the
                         controller / fast path / latency benchmarks (fixed
                         padded shapes, compile once, reuse every round;
@@ -36,6 +52,8 @@ Three entry points, one semantics:
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -48,132 +66,213 @@ from repro.core.policy import (PolicyConfig, corais_admit, corais_encode,
 
 DECODE_MODES = ("greedy", "sample")
 
-__all__ = ["DECODE_MODES", "policy_decide", "make_policy_assign",
-           "make_policy_assign_fused", "make_decision_fn",
-           "sampling_decode"]
+__all__ = ["DECODE_MODES", "DecisionSpec", "policy_decide",
+           "make_policy_assign", "make_policy_assign_fused",
+           "make_assign_factory", "make_decision_fn", "sampling_decode"]
 
 
-def policy_decide(key, params, policy_state, inst, cfg: PolicyConfig, *,
-                  mode: str = "greedy", num_samples: int = 64,
-                  backend: Optional[str] = None,
-                  admission: bool = False,
-                  fused_decode: bool = False,
-                  num_candidates: Optional[int] = None,
-                  normalize: bool = True):
+@dataclasses.dataclass(frozen=True)
+class DecisionSpec:
+    """Every knob of one scheduling decision, in one hashable value.
+
+    Fields mirror the historical ``policy_decide`` keywords:
+
+    mode            "greedy" (argmax, ignores the PRNG key) or "sample"
+                    (best-of-``num_samples`` eq-19 dispatch).
+    num_samples     complete decisions drawn in sample mode.
+    backend         score/decode kernel backend name (None = default; see
+                    core.policy.SCORE_BACKENDS / DECODE_BACKENDS).
+    admission       also threshold the admission head; decisions become
+                    ``(assign, admit)`` pairs (requires ``admit_head=True``).
+    fused_decode    decode inside the scoring kernel; never materializes
+                    the (Z, Q) log-prob matrix.
+    num_candidates  per-request candidate-set size K for sampled dispatch
+                    (None = all edges, the exact eq-19 distribution).
+    normalize       greedy only: False skips the log-softmax normalizer
+                    (identical argmax, cheapest serving path).
+
+    Frozen and hashable, so a spec can key compile caches; ``replace``
+    derives variants (``spec.replace(mode="sample")``).
+    """
+
+    mode: str = "greedy"
+    num_samples: int = 64
+    backend: Optional[str] = None
+    admission: bool = False
+    fused_decode: bool = False
+    num_candidates: Optional[int] = None
+    normalize: bool = True
+
+    def __post_init__(self):
+        if self.mode not in DECODE_MODES:
+            raise ValueError(f"unknown decode mode {self.mode!r}; "
+                             f"supported: {', '.join(DECODE_MODES)}")
+
+    def replace(self, **changes) -> "DecisionSpec":
+        return dataclasses.replace(self, **changes)
+
+
+_LEGACY_FLAGS = ("mode", "num_samples", "backend", "admission",
+                 "fused_decode", "num_candidates", "normalize")
+
+
+def _as_spec(spec: Optional[DecisionSpec], legacy: dict,
+             base: Optional[DecisionSpec] = None) -> DecisionSpec:
+    """Fold pre-DecisionSpec keyword flags into a spec (deprecated shim).
+
+    ``legacy`` holds only the flags the caller explicitly passed. A spec
+    and legacy flags together is ambiguous and raises; legacy flags alone
+    are applied on top of ``base`` (the entry point's default spec) with a
+    DeprecationWarning."""
+    legacy = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if spec is not None:
+        if not isinstance(spec, DecisionSpec):
+            raise TypeError(f"spec must be a DecisionSpec, got "
+                            f"{type(spec).__name__}; legacy flags go after "
+                            f"it as keywords")
+        if legacy:
+            raise TypeError(
+                f"pass either spec=DecisionSpec(...) or the legacy keyword "
+                f"flags, not both (got spec and {sorted(legacy)})")
+        return spec
+    base = DecisionSpec() if base is None else base
+    if legacy:
+        warnings.warn(
+            "per-call decision keywords (mode=, fused_decode=, ...) are "
+            "deprecated; build a repro.core.inference.DecisionSpec and "
+            "pass spec=", DeprecationWarning, stacklevel=3)
+        return dataclasses.replace(base, **legacy)
+    return base
+
+
+class _Unset:
+    def __repr__(self):  # keep help()/signature output readable
+        return "<unset>"
+
+
+_UNSET = _Unset()
+
+
+def policy_decide(key, params, policy_state, inst, cfg: PolicyConfig,
+                  spec: Optional[DecisionSpec] = None, *,
+                  mode=_UNSET, num_samples=_UNSET, backend=_UNSET,
+                  admission=_UNSET, fused_decode=_UNSET,
+                  num_candidates=_UNSET, normalize=_UNSET):
     """One full scheduling decision on a frozen instance: (Z,) int32
-    execution edge per request. ``mode="greedy"`` ignores ``key``;
-    ``mode="sample"`` draws ``num_samples`` complete decisions from the
-    per-request top-``num_candidates`` candidate set and keeps the
-    cheapest (eq 19), greedy included as a candidate
-    (``num_candidates=None`` keeps every edge, i.e. the exact eq-19
-    distribution; a small K truncates the tail for O(Z*K) sampling).
-
-    ``fused_decode=True`` decodes inside the scoring kernel — the (Z, Q)
-    log-prob matrix is never materialized. ``normalize=False`` (greedy
-    only) additionally skips the log-softmax normalizer: identical edge
-    choice, cheapest serving path.
+    execution edge per request, configured by ``spec`` (see
+    :class:`DecisionSpec`; the trailing keywords are the deprecated
+    pre-spec shim). ``mode="greedy"`` ignores ``key``; ``mode="sample"``
+    draws ``num_samples`` complete decisions from the per-request
+    top-``num_candidates`` candidate set and keeps the cheapest (eq 19),
+    greedy included as a candidate.
 
     With ``admission=True`` (requires a policy built with
     ``admit_head=True``) the same encoder pass also thresholds the
     admission head, and the decision is an ``(assign, admit)`` pair —
     the engine's extended AssignFn contract."""
-    if mode not in DECODE_MODES:
-        raise ValueError(f"unknown decode mode {mode!r}; "
-                         f"supported: {', '.join(DECODE_MODES)}")
+    spec = _as_spec(spec, dict(mode=mode, num_samples=num_samples,
+                               backend=backend, admission=admission,
+                               fused_decode=fused_decode,
+                               num_candidates=num_candidates,
+                               normalize=normalize))
     c_emb, h_emb, _ = corais_encode(params, policy_state, inst, cfg,
                                     training=False)
     emask = inst["edge_mask"]
-    if mode == "greedy":
-        if fused_decode:
+    if spec.mode == "greedy":
+        if spec.fused_decode:
             ti, _ = corais_score_decode(params, c_emb, h_emb, emask, cfg,
-                                        k=1, normalize=normalize,
-                                        backend=backend)
+                                        k=1, normalize=spec.normalize,
+                                        backend=spec.backend)
             assign = ti[..., 0]
         else:
             log_probs = corais_score(params, c_emb, h_emb, emask, cfg,
-                                     backend=backend)
+                                     backend=spec.backend)
             assign = greedy_decode(log_probs)
     else:
-        k = num_candidates or emask.shape[-1]
-        if fused_decode:
+        k = spec.num_candidates or emask.shape[-1]
+        if spec.fused_decode:
             ti, tv = corais_score_decode(params, c_emb, h_emb, emask, cfg,
                                          k=k, normalize=True,
-                                         backend=backend)
+                                         backend=spec.backend)
         else:
             log_probs = corais_score(params, c_emb, h_emb, emask, cfg,
-                                     backend=backend)
+                                     backend=spec.backend)
             tv, ti = jax.lax.top_k(log_probs, k)
         assign, _ = topk_sampling_decode(key, inst, ti.astype(jnp.int32),
-                                         tv, num_samples)
+                                         tv, spec.num_samples)
     assign = assign.astype(jnp.int32)
-    if not admission:
+    if not spec.admission:
         return assign
     admit = corais_admit(params, c_emb, h_emb, emask, cfg) > 0
     return assign, admit & inst["req_mask"]
 
 
-def make_policy_assign(params, policy_state, policy_cfg: PolicyConfig,
-                       mode: str = "greedy", num_samples: int = 64,
-                       backend: Optional[str] = None,
-                       admission: bool = False,
-                       fused_decode: bool = False,
-                       num_candidates: Optional[int] = None,
-                       normalize: bool = True):
-    """The CoRaiS policy as an engine scheduler: AssignFn(key, inst).
+def make_assign_factory(defaults: DecisionSpec):
+    """Build an engine scheduler factory around a default
+    :class:`DecisionSpec` — the single registration point behind every
+    policy entry in ``engine.ASSIGN_FNS`` (``"policy"`` and
+    ``"policy-fused"`` are the same factory with different defaults).
 
-    The closure stays un-jitted so the engine can trace it inside its own
-    jitted/vmapped rollout; the whole rollout then compiles end-to-end over
-    the instance axis, fused scoring kernel included. ``admission=True``
-    returns (assign, admit) pairs — see :func:`policy_decide`."""
+    The returned factory has the AssignFn-factory signature
+    ``(params, policy_state, policy_cfg, spec=None, **legacy_flags)`` and
+    yields an un-jitted closure ``fn(key, inst)`` the engine traces inside
+    its own jitted/vmapped rollout; the whole rollout then compiles
+    end-to-end over the instance axis, fused scoring kernel included."""
 
-    def fn(key, inst):
-        return policy_decide(key, params, policy_state, inst, policy_cfg,
-                             mode=mode, num_samples=num_samples,
-                             backend=backend, admission=admission,
-                             fused_decode=fused_decode,
-                             num_candidates=num_candidates,
-                             normalize=normalize)
+    def factory(params, policy_state, policy_cfg: PolicyConfig,
+                spec: Optional[DecisionSpec] = None, **legacy):
+        bad = set(legacy) - set(_LEGACY_FLAGS)
+        if bad:
+            raise TypeError(f"unknown decision flags {sorted(bad)}; "
+                            f"DecisionSpec fields: {_LEGACY_FLAGS}")
+        resolved = _as_spec(spec, legacy, base=defaults)
 
-    return fn
+        def fn(key, inst):
+            return policy_decide(key, params, policy_state, inst,
+                                 policy_cfg, resolved)
 
+        return fn
 
-# engine.resolve_assign_fn treats registry entries tagged this way as
-# factories to be built with policy kwargs rather than called per round
-make_policy_assign._assign_factory = True
-
-
-def make_policy_assign_fused(params, policy_state, policy_cfg: PolicyConfig,
-                             **kwargs):
-    """``make_policy_assign`` with the fused in-kernel decode on by default
-    (the engine's ``ASSIGN_FNS["policy-fused"]`` entry)."""
-    kwargs.setdefault("fused_decode", True)
-    return make_policy_assign(params, policy_state, policy_cfg, **kwargs)
+    # engine.resolve_assign_fn treats registry entries tagged this way as
+    # factories to be built with policy kwargs rather than called per round
+    factory._assign_factory = True
+    factory._decision_defaults = defaults
+    return factory
 
 
-make_policy_assign_fused._assign_factory = True
+#: The CoRaiS policy as an engine scheduler factory (``ASSIGN_FNS["policy"]``).
+make_policy_assign = make_assign_factory(DecisionSpec())
+
+#: Same factory with the fused in-kernel decode on by default
+#: (``ASSIGN_FNS["policy-fused"]``).
+make_policy_assign_fused = make_assign_factory(
+    DecisionSpec(fused_decode=True))
+
+make_policy_assign.__name__ = "make_policy_assign"
+make_policy_assign_fused.__name__ = "make_policy_assign_fused"
 
 
-def make_decision_fn(params, policy_state, cfg: PolicyConfig, *,
-                     mode: str = "greedy", num_samples: int = 64,
-                     backend: Optional[str] = None,
-                     fused_decode: bool = False,
-                     num_candidates: Optional[int] = None,
-                     normalize: bool = True,
-                     donate: bool = False):
+def make_decision_fn(params, policy_state, cfg: PolicyConfig,
+                     spec: Optional[DecisionSpec] = None, *,
+                     donate: bool = False,
+                     mode=_UNSET, num_samples=_UNSET, backend=_UNSET,
+                     fused_decode=_UNSET, num_candidates=_UNSET,
+                     normalize=_UNSET):
     """Compile-once decision function ``decide(inst, key) -> (Z,) int32``
     for the real-time serving path: pad snapshots to a constant shape and
-    every round after the first runs at kernel latency.
+    every round after the first runs at kernel latency. Configured by
+    ``spec`` (legacy keywords remain as the deprecated shim).
 
     ``donate=True`` donates the instance buffers to the call (the fast
     path's double-buffered loop re-stages fresh device buffers each round,
     so XLA can reuse the memory in place; unsupported-donation backends
     like CPU just warn and copy)."""
+    spec = _as_spec(spec, dict(mode=mode, num_samples=num_samples,
+                               backend=backend, fused_decode=fused_decode,
+                               num_candidates=num_candidates,
+                               normalize=normalize))
 
     def decide(inst, key):
-        return policy_decide(key, params, policy_state, inst, cfg,
-                             mode=mode, num_samples=num_samples,
-                             backend=backend, fused_decode=fused_decode,
-                             num_candidates=num_candidates,
-                             normalize=normalize)
+        return policy_decide(key, params, policy_state, inst, cfg, spec)
 
     return jax.jit(decide, donate_argnums=(0,) if donate else ())

@@ -44,6 +44,10 @@ from repro.nn.module import split_keys, uniform_init
 
 EDGE_FEATURES = 8   # coords(2) + phi coeffs(2) + replicas(1) + workload(3)
 REQ_FEATURES = 3    # source coords(2) + data size(1)
+# Schema-v3 tier extras (PolicyConfig.tier_features): per-node cloud flag +
+# cache locality, per-request deadline slack / priority / source residency.
+TIER_EDGE_FEATURES = 2   # tier(1) + cache_frac(1)
+TIER_REQ_FEATURES = 3    # req_slack(1) + req_priority(1) + req_cached(1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +72,13 @@ class PolicyConfig:
     admit_head: bool = False
     admit_hidden: int = 64
     admit_bias: float = 2.0     # initial logit offset: start near admit-all
+    # Edge–cloud tier conditioning (schema v3): widen both encoders'
+    # input projections with the tier/cache-locality and deadline-slack/
+    # priority features the engine's round_instance exposes (zeros when an
+    # instance predates the tier, e.g. oracle snapshots or static training
+    # instances). Off by default so flat-tier checkpoints keep their
+    # parameter count.
+    tier_features: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -75,24 +86,45 @@ class PolicyConfig:
 # ---------------------------------------------------------------------------
 
 
-def edge_features(inst) -> jax.Array:
-    return jnp.concatenate(
-        [
-            inst["edge_coords"],
-            inst["phi"],
-            inst["replicas"][..., None],
-            inst["workload"],
-        ],
-        axis=-1,
-    ).astype(jnp.float32)
+def edge_feature_dim(cfg: "PolicyConfig") -> int:
+    return EDGE_FEATURES + (TIER_EDGE_FEATURES if cfg.tier_features else 0)
 
 
-def request_features(inst) -> jax.Array:
+def req_feature_dim(cfg: "PolicyConfig") -> int:
+    return REQ_FEATURES + (TIER_REQ_FEATURES if cfg.tier_features else 0)
+
+
+def _tier_col(inst, key, like) -> jax.Array:
+    """A (..., K, 1) tier-feature column, zeros when the instance predates
+    schema v3 (oracle snapshots, static training instances)."""
+    if key in inst:
+        return inst[key][..., None].astype(jnp.float32)
+    return jnp.zeros(like.shape[:-1] + (1,), jnp.float32)
+
+
+def edge_features(inst, cfg: "PolicyConfig" = None) -> jax.Array:
+    cols = [
+        inst["edge_coords"],
+        inst["phi"],
+        inst["replicas"][..., None],
+        inst["workload"],
+    ]
+    if cfg is not None and cfg.tier_features:
+        cols.append(_tier_col(inst, "tier", inst["phi"]))
+        cols.append(_tier_col(inst, "cache_frac", inst["phi"]))
+    return jnp.concatenate(cols, axis=-1).astype(jnp.float32)
+
+
+def request_features(inst, cfg: "PolicyConfig" = None) -> jax.Array:
     src = inst["req_src"][..., None].astype(jnp.int32)
     coords = jnp.take_along_axis(inst["edge_coords"], src, axis=-2)
-    return jnp.concatenate(
-        [coords, inst["req_size"][..., None]], axis=-1
-    ).astype(jnp.float32)
+    size = inst["req_size"][..., None]
+    cols = [coords, size]
+    if cfg is not None and cfg.tier_features:
+        cols.append(_tier_col(inst, "req_slack", size))
+        cols.append(_tier_col(inst, "req_priority", size))
+        cols.append(_tier_col(inst, "req_cached", size))
+    return jnp.concatenate(cols, axis=-1).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -150,8 +182,8 @@ def corais_init(key, cfg: PolicyConfig):
     edge_layers, edge_states = _encoder_init(keys[2], cfg, cfg.edge_layers, cfg.edge_align)
     req_layers, req_states = _encoder_init(keys[3], cfg, cfg.request_layers, cfg.req_align)
     params = {
-        "edge_proj": linear_init(keys[0], EDGE_FEATURES, d),
-        "req_proj": linear_init(keys[1], REQ_FEATURES, d),
+        "edge_proj": linear_init(keys[0], edge_feature_dim(cfg), d),
+        "req_proj": linear_init(keys[1], req_feature_dim(cfg), d),
         "edge_layers": edge_layers,
         "req_layers": req_layers,
         # eq (15): queries from [f_hat, h_hat, f_q] (3d), kv from requests
@@ -237,10 +269,19 @@ def corais_encode(params, state, inst, cfg: PolicyConfig, *,
     emask = inst["edge_mask"]
     rmask = inst["req_mask"]
 
-    ef = edge_features(inst)
-    # Static rescale keeps the heavy workload features in a trainable range.
-    ef = ef * jnp.asarray([1, 1, 1, 1, 1] + [cfg.feature_scale] * 3, jnp.float32)
-    rf = request_features(inst)
+    ef = edge_features(inst, cfg)
+    # Static rescale keeps the heavy workload features in a trainable range;
+    # the tier extras (flags/fractions in [0,1]) pass through unscaled.
+    escale = [1, 1, 1, 1, 1] + [cfg.feature_scale] * 3
+    if cfg.tier_features:
+        escale += [1] * TIER_EDGE_FEATURES
+    ef = ef * jnp.asarray(escale, jnp.float32)
+    rf = request_features(inst, cfg)
+    if cfg.tier_features:
+        # deadline slack (capped upstream) and priority get the same static
+        # rescale as the workload features; the 0/1 residency bit passes.
+        rscale = [1, 1, 1] + [cfg.feature_scale, cfg.feature_scale, 1]
+        rf = rf * jnp.asarray(rscale, jnp.float32)
 
     f = linear_apply(params["edge_proj"], ef)
     h = linear_apply(params["req_proj"], rf)

@@ -95,10 +95,17 @@ class QueuedRequest:
     source_edge: int
     service: int = 0
     submit_time: float = 0.0
+    # Schema-v3 fields: absolute hard-SLO time (inf = no deadline) and an
+    # importance level the scheduler may condition on.
+    deadline: float = float("inf")
+    priority: int = 0
     # Filled by the runtime:
     exec_edge: int = -1
     start_time: float = -1.0
     finish_time: float = -1.0
+    # Cache-aside warm-up charged at dispatch when the execution node's
+    # service cache missed (repro.serving.cache); 0.0 on a hit.
+    miss_penalty: float = 0.0
 
 
 @dataclasses.dataclass

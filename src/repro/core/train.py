@@ -30,8 +30,10 @@ from repro.resilience import faults as faults_lib
 from repro.resilience.policies import nearest_alive
 from repro.serving import engine as engine_lib
 from repro.serving.engine import EngineConfig
-from repro.workloads import materialize_round_batch, scenario
-from repro.workloads.scenarios import scenario_fault_spec
+
+# NOTE: repro.workloads is imported lazily inside temporal_train —
+# workloads.scenarios depends on repro.serving (cloud/cache specs), which
+# pulls in repro.core, so a module-level import here would be circular.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +207,13 @@ class TemporalRLConfig:
     admission: bool = False
     slo: float = 0.0
     slo_penalty: float = 0.0
+    # Deadline-aware training (schema v3): with ``deadline_penalty > 0``
+    # the episode cost adds ``deadline_penalty * deadline_miss_frac`` —
+    # the fraction of committed finite-deadline requests that finished
+    # past their deadline (or never finished). Pairs with
+    # ``policy.tier_features`` so the encoder can see the slack it is
+    # being charged for.
+    deadline_penalty: float = 0.0
     # Train only the admission head, freezing every other parameter (the
     # warm-started dispatch weights): episode-level REINFORCE at small
     # batch sizes is noisy enough to destroy a good dispatch policy, and
@@ -303,6 +312,14 @@ def temporal_rl_loss(params, policy_state, sim_state, arrivals, sample_key,
         viol_frac = violations.astype(jnp.float32) / total
         cost = cost + cfg.slo_penalty * viol_frac
         aux["slo_violation_frac"] = jnp.mean(viol_frac)
+    if cfg.deadline_penalty > 0:
+        finite = committed & (sim["slot_deadline"] < engine_lib.INF / 2)
+        missed = finite & (~done
+                           | (sim["slot_finish"] > sim["slot_deadline"]))
+        miss_frac = (jnp.sum(missed, -1).astype(jnp.float32)
+                     / jnp.maximum(jnp.sum(finite, -1), 1))
+        cost = cost + cfg.deadline_penalty * miss_frac
+        aux["deadline_miss_frac"] = jnp.mean(miss_frac)
     adv = cost - jnp.mean(cost)
 
     reinforce = jnp.sum(logps, axis=0) * jax.lax.stop_gradient(adv)  # (B,)
@@ -359,8 +376,17 @@ def temporal_train(
     (scenario-conditioned), rolls all of them forward in parallel on device,
     and applies one REINFORCE update on the episode returns. Returns
     (params, state, opt_state, history) like :func:`train`."""
+    from repro.workloads import materialize_round_batch, scenario
+    from repro.workloads.scenarios import scenario_cloud_spec, scenario_fault_spec
+
     num_batches = num_batches if num_batches is not None else cfg.num_batches
     ecfg = cfg.engine
+    cloud_spec, cache_spec = scenario_cloud_spec(cfg.scenario)
+    if cloud_spec is not None and ecfg.cloud is None:
+        # cloud-* scenarios pin their tier + cache laws in the registry;
+        # thread them into the engine automatically (like fault specs)
+        ecfg = dataclasses.replace(ecfg, cloud=cloud_spec, cache=cache_spec)
+        cfg = dataclasses.replace(cfg, engine=ecfg)
     wl = scenario(cfg.scenario)
     fspec = cfg.fault_spec
     if fspec is None:

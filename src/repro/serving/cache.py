@@ -1,0 +1,144 @@
+"""Per-node service caches for the edge–cloud tier (schema v3).
+
+Every edge keeps a fixed number of *service slots* (model weights, container
+images, feature stores — whatever a service needs resident to run fast). A
+request dispatched to a node whose cache holds its ``service`` id runs at
+the nominal phi runtime; a miss triggers a cache-aside pull that adds
+``miss_penalty`` seconds of warm-up to that request's runtime *and* installs
+the service in the node's cache (FIFO eviction), so the next request for the
+same service hits. The cloud tier caches everything — a cloud dispatch is
+always a hit (its elastic backing store is the origin the edges pull from).
+
+One semantics, two implementations, equivalence-tested against each other:
+
+* :func:`cache_commit` — pure jnp ``lax.scan`` over one round's scheduled
+  arrivals in slot (== rid) order, run inside the array engine's ``commit``
+  (the cache tensors live in the SimState pytree, fixed shapes (N, slots)).
+* :class:`HostCache` — the event-driven oracle's mirror, accessed request
+  by request in the same rid order by ``MultiEdgeSim._round``.
+
+Both process a round's dispatch decisions sequentially in global arrival
+(rid) order, which makes hit/miss outcomes — including two same-service
+misses in one round, where the second becomes a hit — deterministic and
+identical across engines.
+
+FIFO (not LRU) eviction is deliberate: hits don't reorder state, so cache
+contents depend only on the *miss sequence*, which keeps the array scan
+O(1)-state and the equivalence argument simple.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+CACHE_EMPTY = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Service-cache law shared by both engines.
+
+    slots         per-edge cache capacity (service ids resident at once).
+    miss_penalty  seconds of cache-aside warm-up added to the runtime of
+                  the request that misses (the service pull).
+    num_services  size of the service-id universe (drives warm placement
+                  and the policy's cache-locality features).
+    warm          deterministically pre-place services edge-by-edge
+                  (edge e starts holding services (e + j) % num_services,
+                  j < slots) so locality structure exists from round 0;
+                  False starts every edge cold.
+    """
+
+    slots: int = 2
+    miss_penalty: float = 0.5
+    num_services: int = 8
+    warm: bool = True
+
+
+def initial_cache(num_nodes: int, num_edges: int,
+                  spec: CacheSpec) -> np.ndarray:
+    """(num_nodes, slots) int32 initial cache contents (CACHE_EMPTY = free).
+    Rows past ``num_edges`` (the cloud) stay empty — the cloud is an
+    always-hit by convention, its row is never consulted."""
+    cache = np.full((num_nodes, spec.slots), CACHE_EMPTY, np.int32)
+    if spec.warm:
+        for e in range(num_edges):
+            for j in range(spec.slots):
+                cache[e, j] = (e + j) % max(1, spec.num_services)
+    return cache
+
+
+def cache_commit(cache, ptr, assign, service, on, num_edges: int):
+    """One round's cache pass, array-native: scan the round's arrivals in
+    slot (== rid) order, looking up and cache-aside-installing each.
+
+    cache   (N, C) int32   per-node resident service ids
+    ptr     (N,)   int32   per-node FIFO insertion cursor
+    assign  (A,)   int32   dispatch decision per arrival
+    service (A,)   int32   service id per arrival
+    on      (A,)   bool    real, scheduled arrivals (mask & admitted)
+    Returns (cache, ptr, hit) with hit (A,) bool (False wherever ``on``
+    is False). Cloud nodes (index >= num_edges) always hit, never install.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    slots = cache.shape[-1]
+
+    def body(carry, x):
+        cache, ptr = carry
+        node, svc, active = x
+        is_cloud = node >= num_edges
+        hit = jnp.any(cache[node] == svc) | is_cloud
+        install = active & ~hit
+        slot = ptr[node]
+        cache = cache.at[node, slot].set(
+            jnp.where(install, svc, cache[node, slot]))
+        ptr = ptr.at[node].set(
+            jnp.where(install, (slot + 1) % slots, slot))
+        return (cache, ptr), hit & active
+
+    (cache, ptr), hit = lax.scan(
+        body, (cache, ptr),
+        (assign.astype(jnp.int32), service.astype(jnp.int32), on))
+    return cache, ptr, hit
+
+
+class HostCache:
+    """The event-driven oracle's cache mirror: same FIFO cache-aside
+    semantics as :func:`cache_commit`, accessed one request at a time (the
+    simulator sorts each round's decisions by rid first). Tracks aggregate
+    hit/miss counts for ``MultiEdgeSim.metrics``."""
+
+    def __init__(self, num_nodes: int, num_edges: int, spec: CacheSpec):
+        self.spec = spec
+        self.num_edges = int(num_edges)
+        self.cache = initial_cache(num_nodes, num_edges, spec)
+        self.ptr = np.zeros(num_nodes, np.int64)
+        self.hits = 0
+        self.misses = 0
+
+    def access(self, node: int, service: int) -> bool:
+        """Look up (and on miss, install) ``service`` at ``node``; returns
+        True on a hit. The caller charges ``spec.miss_penalty`` runtime
+        warm-up on False."""
+        node = int(node)
+        if node >= self.num_edges or service in self.cache[node]:
+            self.hits += 1
+            return True
+        self.misses += 1
+        self.cache[node, self.ptr[node]] = service
+        self.ptr[node] = (self.ptr[node] + 1) % self.spec.slots
+        return False
+
+    def hit_fraction(self, node: int, services) -> float:
+        """Fraction of ``services`` resident at ``node`` right now (no
+        state change) — the oracle twin of the engine's per-edge
+        cache-locality feature."""
+        if len(services) == 0:
+            return 0.0
+        if node >= self.num_edges:
+            return 1.0
+        row = self.cache[int(node)]
+        return float(np.mean([s in row for s in services]))

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.heuristics import solve_greedy, solve_local, solve_random
-from repro.core.inference import make_decision_fn
+from repro.core.inference import DecisionSpec, make_decision_fn
 from repro.core.policy import PolicyConfig
 from repro.core.state import QueuedRequest, snapshot_instance
 from repro.serving.topology import nearest_alive_edge
@@ -45,22 +45,33 @@ class CentralController:
     # (None: all edges — exact eq-19 distribution)
     fused_decode: bool = False
     num_candidates: Optional[int] = None
+    # full decode configuration in one value; overrides the per-field knobs
+    # above when set (see repro.core.inference.DecisionSpec)
+    decision: Optional[DecisionSpec] = None
 
     def __post_init__(self):
         self._key = jax.random.PRNGKey(self.seed)
         self._decide = None
         self.last_decision_time = 0.0
 
+    def decision_spec(self) -> DecisionSpec:
+        """The DecisionSpec this controller schedules with — ``decision``
+        verbatim when given, else assembled from the legacy per-field
+        knobs (scheduler name picks the decode mode)."""
+        if self.decision is not None:
+            return self.decision
+        mode = "sample" if self.scheduler == "corais-sample" else "greedy"
+        return DecisionSpec(mode=mode, num_samples=self.sample_n,
+                            fused_decode=self.fused_decode,
+                            num_candidates=self.num_candidates)
+
     def _policy_assign(self, inst) -> np.ndarray:
         if self._decide is None:
             # shared decision path (core.inference): compile once against
             # the padded snapshot shape, reuse every round
-            mode = "sample" if self.scheduler == "corais-sample" else "greedy"
             self._decide = make_decision_fn(
                 self.policy_params, self.policy_state, self.policy_cfg,
-                mode=mode, num_samples=self.sample_n,
-                fused_decode=self.fused_decode,
-                num_candidates=self.num_candidates)
+                self.decision_spec())
         jinst = jax.tree.map(jnp.asarray, inst)
         self._key, sub = jax.random.split(self._key)
         assign = self._decide(jinst, sub)

@@ -52,13 +52,15 @@ class SimEdge:
 
     # -- execution -----------------------------------------------------
 
-    def true_runtime(self, size: float, rid: Optional[int] = None) -> float:
+    def true_runtime(self, size: float, rid: Optional[int] = None,
+                     warmup: float = 0.0) -> float:
         if self.jitter_fn is not None and rid is not None:
             jitter = float(self.jitter_fn(rid))
         else:
             jitter = 1.0 + self.noise * float(self.rng.standard_normal())
         return float(service_runtime(self.true_a, self.true_b, size,
-                                     speed=self.speed_factor, jitter=jitter))
+                                     speed=self.speed_factor, jitter=jitter,
+                                     warmup=warmup))
 
     def start_executable(self, now: float) -> list[tuple[float, QueuedRequest]]:
         """Pop requests from Q^le onto free replica lanes.
@@ -69,7 +71,8 @@ class SimEdge:
         while self.state.q_le and min(self._lanes) <= now + 1e-12 and self.alive:
             lane = int(np.argmin(self._lanes))
             req = self.state.q_le.pop(0)
-            rt = self.true_runtime(req.data_size, rid=req.rid)
+            rt = self.true_runtime(req.data_size, rid=req.rid,
+                                   warmup=req.miss_penalty)
             start = max(now, self._lanes[lane])
             self._lanes[lane] = start + rt
             req.start_time = start

@@ -73,6 +73,8 @@ from repro.resilience.policies import (ResilienceConfig, admission_mask,
                                        breaker_step, dispatch_mask,
                                        nearest_alive, probe_cap)
 from repro.serving import rounds
+from repro.serving.cache import CACHE_EMPTY, CacheSpec, cache_commit, initial_cache
+from repro.serving.topology import CloudSpec
 
 #: Sentinel for "never" (empty lane slots, un-ready/un-started requests).
 INF = 1e30
@@ -83,6 +85,10 @@ DRAIN_HORIZON = 1e7
 #: retries must sort after same-instant fresh local commits in the ready
 #: order (large enough to survive float32 rounding at rollout timescales).
 RETRY_EPS = 1e-6
+#: Deadline-slack cap (seconds) for the policy's per-request slack feature:
+#: requests with no deadline (slot_deadline == INF) saturate here instead
+#: of feeding INF into the encoder.
+SLACK_CAP = 8.0
 
 #: assign_fn(key, instance) -> (A,) int32 execution-edge per pending
 #: request, or an (assign, admit) tuple when the policy also decides
@@ -110,6 +116,26 @@ class EngineConfig:
     learn_phi: bool = False        # online phi fitting vs oracle phi_true
     phi_min_samples: int = 8
     resilience: Optional[ResilienceConfig] = None
+    # Edge–cloud tier: with ``cloud`` set, one extra node (index num_edges)
+    # is appended to every per-node array — elastic lanes, its own phi line,
+    # WAN transfer law (rounds.extend_cluster_with_cloud). ``cache`` gives
+    # every *edge* a fixed-slot service cache (serving/cache.py); a miss
+    # adds ``cache.miss_penalty`` warm-up to that request's runtime. Both
+    # default off, so flat single-tier configs are unchanged.
+    cloud: Optional[CloudSpec] = None
+    cache: Optional[CacheSpec] = None
+
+    @property
+    def num_nodes(self) -> int:
+        """Dispatchable nodes: the edges plus the cloud row when tiered."""
+        return self.num_edges + (1 if self.cloud is not None else 0)
+
+    @property
+    def lane_width(self) -> int:
+        """Lane-table width L: the cloud's elastic lanes may exceed
+        ``replicas_high``."""
+        return max(self.replicas_high,
+                   self.cloud.lanes if self.cloud is not None else 0)
 
     @property
     def num_slots(self) -> int:
@@ -122,27 +148,49 @@ class EngineConfig:
 
 
 def init_state(cfg: EngineConfig, seed: int = 0) -> dict:
-    """Fresh SimState for one instance (numpy leaves; jit converts)."""
-    q, lanes, z = cfg.num_edges, cfg.replicas_high, cfg.num_slots
+    """Fresh SimState for one instance (numpy leaves; jit converts).
+
+    With ``cfg.cloud`` the per-node axis is ``num_nodes = num_edges + 1``:
+    the cloud row carries its WAN rtt in ``rtt``, ``tier`` 1, elastic lanes,
+    and is always alive. The cache tensors (``cache``/``cache_ptr``) and
+    schema-v3 slot columns (service / deadline / priority / warm-up
+    penalty) are always present so the pytree structure is config-stable
+    for sharding specs; without ``cfg.cache`` they stay inert."""
+    q, n, z = cfg.num_edges, cfg.num_nodes, cfg.num_slots
     cluster = rounds.sample_cluster(q, cfg.replicas_high, cfg.phi_low,
                                     cfg.phi_high, seed)
+    if cfg.cloud is not None:
+        cluster = rounds.extend_cluster_with_cloud(cluster, cfg.cloud)
     phi_true = np.stack([cluster.true_a, cluster.true_b], -1).astype(np.float32)
     lane_free = np.where(
-        np.arange(lanes)[None, :] < cluster.replicas[:, None], 0.0, INF
-    ).astype(np.float32)
+        np.arange(cfg.lane_width)[None, :] < cluster.replicas[:, None],
+        0.0, INF).astype(np.float32)
+    rtt = np.zeros(n, np.float32)
+    tier = np.zeros(n, np.float32)
+    if cfg.cloud is not None:
+        rtt[q:] = cfg.cloud.wan_rtt
+        tier[q:] = 1.0
+    cache = (initial_cache(n, q, cfg.cache) if cfg.cache is not None
+             else np.full((n, 1), CACHE_EMPTY, np.int32))
     return {
         "coords": cluster.coords.astype(np.float32),
         "w": cluster.w.astype(np.float32),
         "phi_true": phi_true,
-        "phi_est": (np.tile(np.float32([1.0, 0.0]), (q, 1))
+        "phi_est": (np.tile(np.float32([1.0, 0.0]), (n, 1))
                     if cfg.learn_phi else phi_true.copy()),
         "replicas": cluster.replicas.astype(np.float32),
-        "speed": np.ones(q, np.float32),
+        "speed": np.ones(n, np.float32),
         "ct": np.float32(cfg.ct),
         "t": np.float32(0.0),
         "round": np.int32(0),
         "completed": np.int32(0),
         "lane_free": lane_free,
+        "rtt": rtt,
+        "tier": tier,
+        "cache": cache,
+        "cache_ptr": np.zeros(n, np.int32),
+        "cache_hits": np.int32(0),
+        "cache_misses": np.int32(0),
         "slot_size": np.zeros(z, np.float32),
         "slot_src": np.zeros(z, np.int32),
         "slot_edge": np.full(z, -1, np.int32),
@@ -152,18 +200,22 @@ def init_state(cfg: EngineConfig, seed: int = 0) -> dict:
         "slot_finish": np.full(z, INF, np.float32),
         "slot_jitter": np.ones(z, np.float32),
         "slot_retries": np.zeros(z, np.float32),
-        "alive": np.ones(q, np.float32),
-        "breaker_open": np.full(q, -1.0, np.float32),
-        "breaker_trips": np.zeros(q, np.float32),
-        "breaker_healthy": np.zeros(q, np.float32),
+        "slot_service": np.zeros(z, np.int32),
+        "slot_deadline": np.full(z, INF, np.float32),
+        "slot_priority": np.zeros(z, np.float32),
+        "slot_penalty": np.zeros(z, np.float32),
+        "alive": np.ones(n, np.float32),
+        "breaker_open": np.full(n, -1.0, np.float32),
+        "breaker_trips": np.zeros(n, np.float32),
+        "breaker_healthy": np.zeros(n, np.float32),
         "shed": np.int32(0),
         "dropped": np.int32(0),
         "retried": np.int32(0),
-        "phi_n": np.zeros(q, np.float32),
-        "phi_sx": np.zeros(q, np.float32),
-        "phi_sy": np.zeros(q, np.float32),
-        "phi_sxx": np.zeros(q, np.float32),
-        "phi_sxy": np.zeros(q, np.float32),
+        "phi_n": np.zeros(n, np.float32),
+        "phi_sx": np.zeros(n, np.float32),
+        "phi_sy": np.zeros(n, np.float32),
+        "phi_sxx": np.zeros(n, np.float32),
+        "phi_sxy": np.zeros(n, np.float32),
     }
 
 
@@ -214,18 +266,19 @@ def advance(state: dict, t_new, cfg: EngineConfig) -> dict:
 
     def body(carry, idx):
         lane_free, start, finish, psums = carry
-        e = jnp.clip(state["slot_edge"][idx], 0, cfg.num_edges - 1)
+        e = jnp.clip(state["slot_edge"][idx], 0, cfg.num_nodes - 1)
         lanes = lane_free[e]
         lane = jnp.argmin(lanes)
         st = jnp.maximum(state["slot_ready"][idx], lanes[lane])
         ok = (keys[idx] < INF / 2) & (st <= t_new)
         size = state["slot_size"][idx]
-        # jnp mirror of rounds.service_runtime
+        # jnp mirror of rounds.service_runtime (incl. cache-miss warm-up)
         rt = jnp.maximum(
             rounds.MIN_RUNTIME,
             (state["phi_true"][e, 0] * size + state["phi_true"][e, 1])
             * jnp.maximum(state["slot_jitter"][idx], rounds.MIN_JITTER)
-            * state["speed"][e],
+            * state["speed"][e]
+            + state["slot_penalty"][idx],
         )
         fin = st + rt
         lane_free = lane_free.at[e, lane].set(jnp.where(ok, fin, lanes[lane]))
@@ -293,12 +346,12 @@ def apply_faults(state: dict, arr: dict, cfg: EngineConfig) -> dict:
     lane_free = jnp.where(died[:, None], INF, state["lane_free"])
     out["lane_free"] = jnp.where(recovered[:, None], fresh, lane_free)
 
-    e = jnp.clip(state["slot_edge"], 0, cfg.num_edges - 1)
+    e = jnp.clip(state["slot_edge"], 0, cfg.num_nodes - 1)
     orphan = ((state["slot_edge"] >= 0) & died[e]
               & (state["slot_finish"] > t))
     retries = state["slot_retries"] + orphan
     new_src = nearest_alive(state["w"], alive,
-                            jnp.clip(state["slot_src"], 0, cfg.num_edges - 1))
+                            jnp.clip(state["slot_src"], 0, cfg.num_nodes - 1))
     backoff = 0.0
     if res is not None and res.retry_backoff_rounds:
         backoff = (res.retry_backoff_rounds * cfg.round_interval
@@ -334,12 +387,21 @@ def dispatchable_edges(state: dict, cfg: EngineConfig):
 def round_instance(state: dict, arr: dict, cfg: EngineConfig) -> dict:
     """Freeze (state, this round's arrivals) into a scheduling instance with
     the same layout as core.instances/core.state.snapshot_instance, so the
-    policy, the heuristics, and the objective all run on it unchanged."""
+    policy, the heuristics, and the objective all run on it unchanged.
+
+    Tier/schema-v3 extras (consumed only by a policy configured with
+    ``tier_features``; heuristics and the objective ignore them): ``tier``
+    (per-node cloud flag), ``cache_frac`` (fraction of this round's
+    services resident per node), ``req_slack`` (deadline slack capped at
+    :data:`SLACK_CAP`), ``req_priority``, and ``req_cached`` (is the
+    request's service resident at its source)."""
     wl = slot_workload_features(
         state["phi_est"], state["replicas"], state["w"], state["ct"],
         state["slot_size"], state["slot_src"], state["slot_edge"],
         state["slot_ready"], state["slot_start"], state["t"],
     )
+    mask = arr["mask"]
+    src = arr["src"].astype(jnp.int32)
     inst = {
         "edge_coords": state["coords"],
         "phi": state["phi_est"],
@@ -347,13 +409,30 @@ def round_instance(state: dict, arr: dict, cfg: EngineConfig) -> dict:
         "workload": wl,
         "w": state["w"],
         "ct": state["ct"],
-        "req_src": arr["src"].astype(jnp.int32),
-        "req_size": jnp.where(arr["mask"], arr["size"], 0.0),
+        "req_src": src,
+        "req_size": jnp.where(mask, arr["size"], 0.0),
         "edge_mask": dispatchable_edges(state, cfg),
-        "req_mask": arr["mask"],
+        "req_mask": mask,
+        "tier": state["tier"],
     }
     if "rid" in arr:  # pass-through for scripted/replay assign fns
         inst["req_rid"] = arr["rid"].astype(jnp.int32)
+    if "deadline" in arr:
+        slack = jnp.clip(arr["deadline"] - state["t"], 0.0, SLACK_CAP)
+        inst["req_slack"] = jnp.where(mask, slack, 0.0).astype(jnp.float32)
+    if "priority" in arr:
+        inst["req_priority"] = jnp.where(
+            mask, arr["priority"], 0.0).astype(jnp.float32)
+    if cfg.cache is not None and "service" in arr:
+        svc = arr["service"].astype(jnp.int32)
+        # (N, A) residency now: cloud rows (tier 1) always hit
+        res = jnp.any(state["cache"][:, :, None] == svc[None, None, :], axis=1)
+        res = res | (state["tier"][:, None] > 0)
+        mf = mask.astype(jnp.float32)
+        inst["cache_frac"] = (jnp.sum(res * mf[None, :], -1)
+                              / jnp.maximum(jnp.sum(mf), 1.0)).astype(jnp.float32)
+        a_idx = jnp.arange(svc.shape[-1])
+        inst["req_cached"] = (res[src, a_idx] & mask).astype(jnp.float32)
     return inst
 
 
@@ -378,8 +457,12 @@ def commit(state: dict, arr: dict, assign, cfg: EngineConfig,
     mask = arr["mask"]
     sched = mask if admit is None else mask & admit
     size = jnp.where(mask, arr["size"], 0.0).astype(jnp.float32)
-    delay = rounds.transfer_delay(state["ct"], size,
-                                  state["w"][src, jnp.clip(assign, 0)])
+    exec_node = jnp.clip(assign, 0, cfg.num_nodes - 1)
+    # eq (2) + per-destination additive delay (the cloud's WAN rtt; zero
+    # for every edge destination, so the flat-tier ready law is unchanged)
+    delay = (rounds.transfer_delay(state["ct"], size,
+                                   state["w"][src, exec_node])
+             + state["rtt"][exec_node])
     ready = state["t"] + jnp.where(assign == src, 0.0, delay)
     if ready_offset is not None:
         ready = ready + ready_offset
@@ -389,6 +472,30 @@ def commit(state: dict, arr: dict, assign, cfg: EngineConfig,
         return jax.lax.dynamic_update_slice(dst, vals, (base,))
 
     out = dict(state)
+    svc = (arr["service"].astype(jnp.int32) if "service" in arr
+           else jnp.zeros_like(src))
+    if cfg.cache is not None:
+        # one sequential cache pass over the round's dispatches in slot
+        # (== rid) order — the oracle's HostCache accesses in the same
+        # order, so hit/miss outcomes are identical across engines
+        cache, ptr, hit = cache_commit(state["cache"], state["cache_ptr"],
+                                       exec_node, svc, sched, cfg.num_edges)
+        miss = sched & ~hit
+        out["cache"], out["cache_ptr"] = cache, ptr
+        out["cache_hits"] = state["cache_hits"] + jnp.sum(hit).astype(jnp.int32)
+        out["cache_misses"] = (state["cache_misses"]
+                               + jnp.sum(miss).astype(jnp.int32))
+        penalty = cfg.cache.miss_penalty * miss.astype(jnp.float32)
+    else:
+        penalty = jnp.zeros_like(size)
+    out["slot_penalty"] = put(state["slot_penalty"], penalty)
+    out["slot_service"] = put(state["slot_service"], svc)
+    if "deadline" in arr:
+        out["slot_deadline"] = put(state["slot_deadline"],
+                                   arr["deadline"].astype(jnp.float32))
+    if "priority" in arr:
+        out["slot_priority"] = put(state["slot_priority"],
+                                   arr["priority"].astype(jnp.float32))
     out["slot_size"] = put(state["slot_size"], size)
     out["slot_src"] = put(state["slot_src"], src)
     out["slot_edge"] = put(state["slot_edge"], jnp.where(sched, assign, -1))
@@ -420,6 +527,13 @@ def step_round(state: dict, arr: dict, assign_fn: AssignFn,
     prev_completed = state["completed"]
     prev_shed, prev_retried = state["shed"], state["retried"]
     state = advance(state, state["t"] + cfg.round_interval, cfg)
+    if fault_mode and cfg.cloud is not None:
+        # materialized fault rows cover the edges; the cloud column is
+        # always alive at nominal speed
+        arr = dict(arr)
+        pad = jnp.ones_like(arr["alive"][..., :1])
+        arr["alive"] = jnp.concatenate([arr["alive"], pad], -1)
+        arr["speed"] = jnp.concatenate([arr["speed"], pad], -1)
     if fault_mode:
         # two-step source failover, mirroring the oracle's admission path:
         # arrivals fail over under the liveness they arrived under, then a
@@ -447,7 +561,7 @@ def step_round(state: dict, arr: dict, assign_fn: AssignFn,
         # resurrect a dead edge by emitting its index)
         assign = nearest_alive(state["w"], inst["edge_mask"],
                                jnp.clip(assign.astype(jnp.int32), 0,
-                                        cfg.num_edges - 1))
+                                        cfg.num_nodes - 1))
         if res is not None and res.breaker:
             half_open = ((state["alive"] > 0)
                          & (state["t"] >= state["breaker_open"])
@@ -509,17 +623,47 @@ def make_rollout(cfg: EngineConfig, assign_fn: AssignFn, *,
     return jax.jit(run)
 
 
+#: The one summary schema (satellite of the edge–cloud API redesign).
+#: Every summary producer in the serving stack —
+#: :func:`summarize` (single/vmapped final states),
+#: :func:`partials_to_summary` / :func:`repro.serving.fleet.fleet_summary`
+#: (psum-reduced shard partials), and the event-driven oracle's
+#: ``MultiEdgeSim.metrics()`` — returns exactly these keys (always present,
+#: zero-valued defaults when no work completed), so benchmarks never
+#: special-case which engine produced a row. ``slo`` / ``slo_violation_frac``
+#: additionally appear when an SLO is given; the oracle adds its
+#: ``decision_*`` wall-clock keys on top (the jitted engines cannot measure
+#: per-decision time). Flat counts/floats only; ``per_edge_completed`` is
+#: the one nested dict (node id -> completions).
+SUMMARY_KEYS = (
+    "completed", "submitted", "shed_requests", "dropped_requests",
+    "stranded_requests", "retried_requests", "shed_rate",
+    "displaced_instances",
+    "mean_response", "p50_response", "p95_response", "max_response",
+    "makespan",
+    "transferred", "transferred_frac", "cross_shard_transferred",
+    "intra_fleet_transferred", "cross_shard_frac", "cross_shard_completed",
+    "per_edge_completed",
+    "deadline_total", "deadline_missed", "deadline_miss_frac",
+    "cache_hits", "cache_misses", "cache_hit_rate",
+    "cloud_completed", "cloud_offload_frac",
+)
+
+
 def summarize(state: dict, slo: Optional[float] = None) -> dict:
-    """Host-side metrics mirroring ``MultiEdgeSim.metrics()`` keys, computed
-    from the final slot table. Works on batched states (leading axis is
-    aggregated as one population).
+    """Host-side metrics from the final slot table, returning exactly
+    :data:`SUMMARY_KEYS` (see there for the schema contract). Works on
+    batched states (leading axis is aggregated as one population).
 
     ``submitted`` counts every arrival the engine saw — dispatched, shed by
     admission control, or dropped by the materializer's overflow clip — so
     ``shed_rate`` and the SLO metrics are honest about load that never
     reached a slot. With ``slo`` set, a violation is a completion slower
     than the SLO *or* any request that was shed, dropped, or stranded on a
-    dead edge (shedding is never a free lunch for the violation metric)."""
+    dead edge (shedding is never a free lunch for the violation metric).
+    ``deadline_*`` covers committed requests with a finite schema-v3
+    deadline: a miss is a completion past its deadline or a stranded
+    request that never completed."""
     s = jax.device_get(state)
     committed = s["slot_edge"] >= 0
     done = committed & (s["slot_finish"] <= np.expand_dims(
@@ -529,6 +673,14 @@ def summarize(state: dict, slo: Optional[float] = None) -> dict:
     stranded = int(committed.sum() - done.sum())
     submitted = int(committed.sum()) + shed + dropped
     completed = int(done.sum())
+    finite_dl = committed & (s["slot_deadline"] < INF / 2)
+    dl_missed = finite_dl & (~done | (s["slot_finish"] > s["slot_deadline"]))
+    dl_total = int(finite_dl.sum())
+    n = s["w"].shape[-1]
+    e_clip = np.clip(s["slot_edge"], 0, n - 1)
+    on_cloud = np.take_along_axis(s["tier"], e_clip, axis=-1) > 0
+    cloud_done = int(np.sum(done & on_cloud))
+    hits, misses = int(np.sum(s["cache_hits"])), int(np.sum(s["cache_misses"]))
     out = {
         "completed": completed,
         "submitted": submitted,
@@ -537,17 +689,44 @@ def summarize(state: dict, slo: Optional[float] = None) -> dict:
         "stranded_requests": stranded,
         "retried_requests": int((s["slot_retries"][committed] > 0).sum()),
         "shed_rate": (shed + dropped) / max(submitted, 1),
+        "displaced_instances": 0,
+        "deadline_total": dl_total,
+        "deadline_missed": int(dl_missed.sum()),
+        "deadline_miss_frac": int(dl_missed.sum()) / max(dl_total, 1),
+        "cache_hits": hits,
+        "cache_misses": misses,
+        "cache_hit_rate": hits / max(hits + misses, 1),
+        "cloud_completed": cloud_done,
+        "cloud_offload_frac": cloud_done / max(completed, 1),
     }
     if not completed:
+        out.update({k: 0.0 for k in ("mean_response", "p50_response",
+                                     "p95_response", "max_response",
+                                     "makespan", "transferred_frac",
+                                     "cross_shard_frac")})
+        out.update({k: 0 for k in ("transferred", "cross_shard_transferred",
+                                   "intra_fleet_transferred",
+                                   "cross_shard_completed")})
+        out["per_edge_completed"] = {}
+        if slo is not None:
+            out["slo"] = float(slo)
+            out["slo_violation_frac"] = ((shed + dropped + stranded)
+                                         / max(submitted, 1))
         return out
     resp = (s["slot_finish"] - s["slot_submit"])[done]
     edges = s["slot_edge"][done]
+    transferred = int((edges != s["slot_src"][done]).sum())
     out.update({
         "mean_response": float(resp.mean()),
         "p50_response": float(np.percentile(resp, 50)),
         "p95_response": float(np.percentile(resp, 95)),
         "max_response": float(resp.max()),
-        "transferred_frac": float((edges != s["slot_src"][done]).mean()),
+        "transferred": transferred,
+        "transferred_frac": transferred / completed,
+        "cross_shard_transferred": 0,
+        "intra_fleet_transferred": transferred,
+        "cross_shard_frac": 0.0,
+        "cross_shard_completed": 0,
         "per_edge_completed": {int(e): int(c) for e, c in
                                zip(*np.unique(edges, return_counts=True))},
         "makespan": float(s["slot_finish"][done].max()),
@@ -607,6 +786,10 @@ def summarize_partials(state: dict, *, hist_bins: int = HIST_BINS,
     per_edge = jnp.zeros(q, jnp.int32).at[edges.ravel()].add(
         done.ravel().astype(jnp.int32))
 
+    finite_dl = committed & (state["slot_deadline"] < INF / 2)
+    dl_missed = finite_dl & (~done | (finish > state["slot_deadline"]))
+    on_cloud = jnp.take_along_axis(state["tier"], edges, axis=-1) > 0
+
     transferred = done & (state["slot_edge"] != state["slot_src"])
     if displaced is None:
         disp_slots = jnp.zeros_like(done)
@@ -635,6 +818,11 @@ def summarize_partials(state: dict, *, hist_bins: int = HIST_BINS,
             transferred & disp_slots).astype(jnp.int32),
         "cross_shard_completed": jnp.sum(disp_slots).astype(jnp.int32),
         "displaced_instances": displaced_instances,
+        "deadline_total": jnp.sum(finite_dl).astype(jnp.int32),
+        "deadline_missed": jnp.sum(dl_missed).astype(jnp.int32),
+        "cache_hits": jnp.sum(state["cache_hits"]).astype(jnp.int32),
+        "cache_misses": jnp.sum(state["cache_misses"]).astype(jnp.int32),
+        "cloud_completed": jnp.sum(done & on_cloud).astype(jnp.int32),
     }
     if slo is not None:
         out["slo_violations"] = jnp.sum(done & (resp > slo)).astype(jnp.int32)
@@ -666,8 +854,9 @@ def _hist_percentile(hist: np.ndarray, pct: float, hist_max: float,
 
 def partials_to_summary(partials: dict, slo: Optional[float] = None,
                         hist_max: float = HIST_MAX) -> dict:
-    """Host-side: reduced :func:`summarize_partials` -> ``summarize``-style
-    metrics dict. p50/p95 come from the histogram (see
+    """Host-side: reduced :func:`summarize_partials` -> the
+    :data:`SUMMARY_KEYS` metrics dict (exactly the :func:`summarize`
+    schema). p50/p95 come from the histogram (see
     :func:`summarize_partials`); all counts, ``mean_response``,
     ``max_response`` and ``makespan`` are exact."""
     p = {k: np.asarray(jax.device_get(v)) for k, v in partials.items()}
@@ -675,6 +864,9 @@ def partials_to_summary(partials: dict, slo: Optional[float] = None,
     submitted = int(p["submitted"])
     shed, dropped = int(p["shed"]), int(p["dropped"])
     stranded = int(p["stranded"])
+    dl_total, dl_missed = int(p["deadline_total"]), int(p["deadline_missed"])
+    hits, misses = int(p["cache_hits"]), int(p["cache_misses"])
+    cloud_done = int(p["cloud_completed"])
     out = {
         "completed": completed,
         "submitted": submitted,
@@ -684,8 +876,28 @@ def partials_to_summary(partials: dict, slo: Optional[float] = None,
         "retried_requests": int(p["retried"]),
         "shed_rate": (shed + dropped) / max(submitted, 1),
         "displaced_instances": int(p["displaced_instances"]),
+        "deadline_total": dl_total,
+        "deadline_missed": dl_missed,
+        "deadline_miss_frac": dl_missed / max(dl_total, 1),
+        "cache_hits": hits,
+        "cache_misses": misses,
+        "cache_hit_rate": hits / max(hits + misses, 1),
+        "cloud_completed": cloud_done,
+        "cloud_offload_frac": cloud_done / max(completed, 1),
     }
     if not completed:
+        out.update({k: 0.0 for k in ("mean_response", "p50_response",
+                                     "p95_response", "max_response",
+                                     "makespan", "transferred_frac",
+                                     "cross_shard_frac")})
+        out.update({k: 0 for k in ("transferred", "cross_shard_transferred",
+                                   "intra_fleet_transferred",
+                                   "cross_shard_completed")})
+        out["per_edge_completed"] = {}
+        if slo is not None and "slo_violations" in p:
+            out["slo"] = float(slo)
+            out["slo_violation_frac"] = ((shed + dropped + stranded)
+                                         / max(submitted, 1))
         return out
     resp_max = float(p["resp_max"])
     transferred = int(p["transferred"])
@@ -697,6 +909,7 @@ def partials_to_summary(partials: dict, slo: Optional[float] = None,
         "p95_response": _hist_percentile(p["resp_hist"], 95.0, hist_max,
                                          resp_max),
         "max_response": resp_max,
+        "transferred": transferred,
         "transferred_frac": transferred / completed,
         "cross_shard_transferred": cross,
         "intra_fleet_transferred": transferred - cross,
@@ -750,10 +963,13 @@ def greedy_assign(key, inst):
 
 #: Engine scheduling backends, selectable by name. Plain entries are
 #: AssignFns; entries tagged ``_assign_factory`` (the policy) are built
-#: with policy kwargs through :func:`resolve_assign_fn`. ``"policy-fused"``
-#: is the policy with the in-kernel fused decode (same decisions, never
-#: materializes the per-round (Z, Q) log-prob matrix — the serving default
-#: for latency-bound rollouts).
+#: with policy kwargs through :func:`resolve_assign_fn`. Both policy names
+#: are aliases of the single :func:`repro.core.inference.make_assign_factory`
+#: factory, differing only in their default
+#: :class:`~repro.core.inference.DecisionSpec`: ``"policy-fused"`` defaults
+#: the in-kernel fused decode on (same decisions, never materializes the
+#: per-round (Z, Q) log-prob matrix — the serving default for latency-bound
+#: rollouts).
 ASSIGN_FNS = {
     "local": local_assign,
     "greedy": greedy_assign,
@@ -766,9 +982,10 @@ def resolve_assign_fn(name: str, **policy_kwargs) -> AssignFn:
     """Look an engine backend up by name.
 
     Heuristic backends resolve to their AssignFn directly; the ``"policy"``
-    entry is a factory and is built from ``policy_kwargs`` (``params``,
-    ``policy_state``, ``policy_cfg``, optional ``mode`` / ``num_samples`` /
-    ``backend`` — see :func:`repro.core.inference.make_policy_assign`)."""
+    / ``"policy-fused"`` entries are one DecisionSpec-parameterized factory
+    and are built from ``policy_kwargs`` (``params``, ``policy_state``,
+    ``policy_cfg``, optional ``spec=DecisionSpec(...)`` or the deprecated
+    per-flag keywords — see :func:`repro.core.inference.make_assign_factory`)."""
     try:
         entry = ASSIGN_FNS[name]
     except KeyError:

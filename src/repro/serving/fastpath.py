@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.inference import make_decision_fn
+from repro.core.inference import DecisionSpec, make_decision_fn
 from repro.core.policy import PolicyConfig
 
 #: (q_pad, z_pad) ladder covering the paper's serving grid (Q <= 100 edges,
@@ -125,7 +125,8 @@ class DecisionFastPath:
     the seed so repeated rounds draw fresh candidates.
     """
 
-    def __init__(self, params, policy_state, cfg: PolicyConfig, *,
+    def __init__(self, params, policy_state, cfg: PolicyConfig,
+                 spec: Optional[DecisionSpec] = None, *,
                  mode: str = "greedy", num_samples: int = 64,
                  buckets: Sequence[tuple[int, int]] = DEFAULT_BUCKETS,
                  fused_decode: bool = True,
@@ -135,17 +136,19 @@ class DecisionFastPath:
                  donate: Optional[bool] = None, seed: int = 0):
         if donate is None:
             donate = jax.default_backend() != "cpu"
-        if normalize is None:
-            # the normalizer cannot move a greedy argmax; sampling needs
-            # true log-probs
-            normalize = mode != "greedy"
-        self.mode = mode
+        if spec is None:
+            if normalize is None:
+                # the normalizer cannot move a greedy argmax; sampling
+                # needs true log-probs
+                normalize = mode != "greedy"
+            spec = DecisionSpec(mode=mode, num_samples=num_samples,
+                                backend=backend, fused_decode=fused_decode,
+                                num_candidates=num_candidates,
+                                normalize=normalize)
+        self.spec = spec
+        self.mode = spec.mode
         self.buckets = tuple(sorted(tuple(b) for b in buckets))
         self.donate = donate
-        self._fn_kwargs = dict(mode=mode, num_samples=num_samples,
-                               backend=backend, fused_decode=fused_decode,
-                               num_candidates=num_candidates,
-                               normalize=normalize, donate=donate)
         self._params, self._state, self._cfg = params, policy_state, cfg
         self._fns: dict[tuple[int, int], object] = {}
         self._staging: dict[tuple[int, int], list] = {}
@@ -170,7 +173,7 @@ class DecisionFastPath:
         fn = self._fns.get(bucket)
         if fn is None:
             fn = make_decision_fn(self._params, self._state, self._cfg,
-                                  **self._fn_kwargs)
+                                  self.spec, donate=self.donate)
             self._fns[bucket] = fn
             # two host staging pytrees (ping-pong): stage round n+1 while
             # round n's transfer may still be reading the other set

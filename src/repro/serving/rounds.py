@@ -78,10 +78,36 @@ def exec_time(a, b, size):
     return a * size + b
 
 
-def service_runtime(a, b, size, speed: float = 1.0, jitter: float = 1.0):
+def service_runtime(a, b, size, speed: float = 1.0, jitter: float = 1.0,
+                    warmup: float = 0.0):
     """Realized lane occupancy of one request: the affine mean, scaled by
     the straggler ``speed`` factor and a noise ``jitter`` multiplier (both
-    1.0 in the deterministic engine), floored at :data:`MIN_RUNTIME`."""
+    1.0 in the deterministic engine), plus an additive ``warmup`` (the
+    service-cache miss penalty — a cache-aside pull happens once, so it is
+    not scaled by speed or jitter), floored at :data:`MIN_RUNTIME`."""
     return np.maximum(
-        MIN_RUNTIME, exec_time(a, b, size) * np.maximum(jitter, MIN_JITTER) * speed
+        MIN_RUNTIME,
+        exec_time(a, b, size) * np.maximum(jitter, MIN_JITTER) * speed + warmup,
+    )
+
+
+def extend_cluster_with_cloud(cluster: ClusterParams, cloud) -> ClusterParams:
+    """Append the cloud tier as one extra node row (index Q) to a sampled
+    cluster: transmission distance ``cloud.wan_dist`` from every edge (the
+    size-proportional WAN bandwidth term; the fixed ``wan_rtt`` is additive
+    per-destination delay and lives outside ``w`` — see
+    :class:`repro.serving.topology.CloudSpec`), its own phi line, and
+    ``cloud.lanes`` elastic service lanes. Both engines call this with the
+    same spec, so (seed, CloudSpec) names one tiered cluster everywhere."""
+    q = cluster.w.shape[0]
+    w = np.zeros((q + 1, q + 1), cluster.w.dtype)
+    w[:q, :q] = cluster.w
+    w[:q, q] = w[q, :q] = cloud.wan_dist
+    return ClusterParams(
+        coords=np.concatenate(
+            [cluster.coords, np.asarray([cloud.coords], cluster.coords.dtype)]),
+        w=w,
+        true_a=np.concatenate([cluster.true_a, [cloud.phi_a]]),
+        true_b=np.concatenate([cluster.true_b, [cloud.phi_b]]),
+        replicas=np.concatenate([cluster.replicas, [cloud.lanes]]),
     )

@@ -18,10 +18,12 @@ from typing import Optional
 import numpy as np
 
 from repro.core.state import QueuedRequest
+from repro.serving.cache import CacheSpec, HostCache
 from repro.serving.controller import CentralController
 from repro.serving.edge import SimEdge
-from repro.serving.rounds import sample_cluster, transfer_delay
-from repro.serving.topology import nearest_alive_edge
+from repro.serving.rounds import (extend_cluster_with_cloud, sample_cluster,
+                                  transfer_delay)
+from repro.serving.topology import CloudSpec, nearest_alive_edge
 from repro.workloads.base import Workload, workload_rng
 
 
@@ -40,6 +42,15 @@ class SimConfig:
     # simulator against the batched engine, which shares the same cluster
     # prior via rounds.sample_cluster.
     phi_oracle: bool = False
+    # Edge–cloud tier (schema v3): an optional cloud node appended as index
+    # ``num_edges`` (WAN distance + fixed RTT, elastic lanes) and optional
+    # per-edge service caches. Mirrors EngineConfig.cloud / .cache.
+    cloud: Optional[CloudSpec] = None
+    cache: Optional[CacheSpec] = None
+
+    @property
+    def num_nodes(self) -> int:
+        return self.num_edges + (1 if self.cloud is not None else 0)
 
 
 class MultiEdgeSim:
@@ -48,6 +59,8 @@ class MultiEdgeSim:
         self.cc = controller
         cluster = sample_cluster(cfg.num_edges, cfg.replicas_high,
                                  cfg.phi_low, cfg.phi_high, cfg.seed)
+        if cfg.cloud is not None:
+            cluster = extend_cluster_with_cloud(cluster, cfg.cloud)
         self.w = cluster.w
         self.edges = [
             SimEdge(
@@ -60,22 +73,39 @@ class MultiEdgeSim:
                 noise=cfg.exec_noise,
                 phi_oracle=cfg.phi_oracle,
             )
-            for i in range(cfg.num_edges)
+            for i in range(cfg.num_nodes)
         ]
+        # fixed per-destination RTT (zero for edges, wan_rtt for the cloud);
+        # additive on top of the size-proportional eq-(2) transfer delay
+        self.rtt = np.zeros(cfg.num_nodes)
+        if cfg.cloud is not None:
+            self.rtt[cfg.num_edges] = cfg.cloud.wan_rtt
+        self.cache = (HostCache(cfg.num_nodes, cfg.num_edges, cfg.cache)
+                      if cfg.cache is not None else None)
         self.now = 0.0
         self._events: list = []   # heap of (time, seq, kind, payload)
         self._seq = 0
         self._rid = 0
+        self._deadline_finite = 0   # submitted requests with a finite deadline
+        self._retried: set[int] = set()   # rids orphaned by an edge failure
         self.metrics_rows: list[dict] = []
         self.decision_times: list[float] = []   # one entry per non-empty round
 
     # -- client API ------------------------------------------------------
 
-    def submit(self, edge_id: int, data_size: float, t: Optional[float] = None):
+    def submit(self, edge_id: int, data_size: float, t: Optional[float] = None,
+               service: int = 0, deadline: float = float("inf"),
+               priority: int = 0):
+        """Submit one request brief. ``deadline`` is the *absolute* hard-SLO
+        time (schema v3; ``inf`` = none), ``service`` keys the node caches."""
         req = QueuedRequest(rid=self._rid, data_size=float(data_size),
                             source_edge=edge_id,
-                            submit_time=self.now if t is None else t)
+                            service=int(service),
+                            submit_time=self.now if t is None else t,
+                            deadline=float(deadline), priority=int(priority))
         self._rid += 1
+        if np.isfinite(req.deadline):
+            self._deadline_finite += 1
         self._push(req.submit_time, "arrival", req)
         return req
 
@@ -98,7 +128,12 @@ class MultiEdgeSim:
             if not 0 <= a.edge < self.cfg.num_edges:
                 raise ValueError(f"arrival at t={a.t} targets edge {a.edge}, "
                                  f"outside 0..{self.cfg.num_edges - 1}")
-            self.submit(int(a.edge), float(a.size), t=float(a.t))
+            self.submit(int(a.edge), float(a.size), t=float(a.t),
+                        service=int(getattr(a, "service", 0)),
+                        deadline=(float(a.t) + float(a.deadline)
+                                  if getattr(a, "deadline", 0.0) > 0
+                                  else float("inf")),
+                        priority=int(getattr(a, "priority", 0)))
         return self.run(until if run_until is None else run_until)
 
     def fail_edge(self, edge_id: int, t: float):
@@ -126,6 +161,17 @@ class MultiEdgeSim:
             decisions = self.cc.schedule(self.edges, pending, self.w,
                                          self.cfg.ct)
             self.decision_times.append(self.cc.last_decision_time)
+            if self.cache is not None:
+                # Cache pass in global arrival (rid) order — the batched
+                # engine's commit scans the round's slots in the same order,
+                # so hit/miss outcomes are identical across engines.
+                for req, target in sorted(decisions, key=lambda d: d[0].rid):
+                    hit = self.cache.access(target, req.service)
+                    req.miss_penalty = (0.0 if hit
+                                        else self.cache.spec.miss_penalty)
+            # Dispatch in decision (admission) order: fault-mode orphan
+            # retries must join queues after the round's fresh arrivals
+            # (the engine's RETRY_EPS ready-time nudge encodes the same).
             for req, target in decisions:
                 req.exec_edge = target
                 src, dst = self.edges[req.source_edge], self.edges[target]
@@ -134,8 +180,9 @@ class MultiEdgeSim:
                 else:
                     src.state.q_out.append(req)
                     dst.state.q_in.append(req)
-                    dt = transfer_delay(self.cfg.ct, req.data_size,
-                                        self.w[req.source_edge, target])
+                    dt = (transfer_delay(self.cfg.ct, req.data_size,
+                                         self.w[req.source_edge, target])
+                          + self.rtt[target])
                     self._push(self.now + dt, "transfer_done", req)
         # kick executions
         for e in self.edges:
@@ -180,7 +227,10 @@ class MultiEdgeSim:
                         "rid": req.rid,
                         "edge": eid,
                         "response": req.finish_time - req.submit_time,
+                        "finish": req.finish_time,
                         "transferred": eid != req.source_edge,
+                        "deadline": req.deadline,
+                        "cloud": eid >= self.cfg.num_edges,
                     })
                     for ft2, r2 in e.start_executable(self.now):
                         self._push(ft2, "exec_done", (r2, e.edge_id, ft2))
@@ -190,6 +240,7 @@ class MultiEdgeSim:
                 # nearest alive edge (their data is re-sent from the source)
                 for req in orphans:
                     req.exec_edge = -1
+                    self._retried.add(req.rid)
                     self._admit(req)
             elif kind == "recover":
                 self.edges[payload].recover(self.now)
@@ -219,6 +270,12 @@ class MultiEdgeSim:
         self.edges[cand].state.q_r.append(req)
 
     def metrics(self) -> dict:
+        """Run summary: exactly :data:`repro.serving.engine.SUMMARY_KEYS`
+        (the one summary schema shared with ``engine.summarize`` and
+        ``fleet.fleet_summary``), plus the oracle-only ``decision_*``
+        wall-clock keys. The oracle has no admission control or overflow
+        clip, so ``shed_requests``/``dropped_requests`` are always 0 and
+        ``stranded_requests`` counts submitted-but-never-completed work."""
         rows = self.metrics_rows
         dec = np.asarray(self.decision_times) if self.decision_times else None
         decision = {
@@ -229,19 +286,56 @@ class MultiEdgeSim:
                                if dec is not None else 0.0),
             "decision_max_s": float(dec.max()) if dec is not None else 0.0,
         }
-        if not rows:
-            return {"completed": 0, "submitted": self._rid, **decision}
+        completed = len(rows)
+        submitted = self._rid
+        dl_total = self._deadline_finite
+        fin_rows = [r for r in rows if np.isfinite(r["deadline"])]
+        dl_missed = (sum(1 for r in fin_rows if r["finish"] > r["deadline"])
+                     + (dl_total - len(fin_rows)))
+        hits = self.cache.hits if self.cache is not None else 0
+        misses = self.cache.misses if self.cache is not None else 0
+        cloud_done = sum(1 for r in rows if r["cloud"])
+        transferred = sum(1 for r in rows if r["transferred"])
+        out = {
+            "completed": completed,
+            "submitted": submitted,
+            "shed_requests": 0,
+            "dropped_requests": 0,
+            "stranded_requests": submitted - completed,
+            "retried_requests": len(self._retried),
+            "shed_rate": 0.0,
+            "displaced_instances": 0,
+            "deadline_total": dl_total,
+            "deadline_missed": dl_missed,
+            "deadline_miss_frac": dl_missed / max(dl_total, 1),
+            "cache_hits": hits,
+            "cache_misses": misses,
+            "cache_hit_rate": hits / max(hits + misses, 1),
+            "cloud_completed": cloud_done,
+            "cloud_offload_frac": cloud_done / max(completed, 1),
+            "transferred": transferred,
+            "cross_shard_transferred": 0,
+            "intra_fleet_transferred": transferred,
+            "cross_shard_frac": 0.0,
+            "cross_shard_completed": 0,
+            **decision,
+        }
+        if not completed:
+            out.update({k: 0.0 for k in ("mean_response", "p50_response",
+                                         "p95_response", "max_response",
+                                         "makespan", "transferred_frac")})
+            out["per_edge_completed"] = {}
+            return out
         resp = np.asarray([r["response"] for r in rows])
         per_edge = {e.edge_id: sum(1 for r in rows if r["edge"] == e.edge_id)
                     for e in self.edges}
-        return {
-            "completed": len(rows),
-            "submitted": self._rid,
+        out.update({
             "mean_response": float(resp.mean()),
             "p50_response": float(np.percentile(resp, 50)),
             "p95_response": float(np.percentile(resp, 95)),
             "max_response": float(resp.max()),
-            "transferred_frac": float(np.mean([r["transferred"] for r in rows])),
+            "transferred_frac": transferred / completed,
             "per_edge_completed": per_edge,
-            **decision,
-        }
+            "makespan": float(max(r["finish"] for r in rows)),
+        })
+        return out

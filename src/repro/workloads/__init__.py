@@ -1,28 +1,31 @@
 """Workload & scenario subsystem: arrival processes, trace record/replay,
 and a named scenario registry driving the simulator, instance sampling for
 training, and the benchmark sweep."""
-from repro.workloads.base import (Arrival, Merged, SizeSpec, Workload,
-                                  edge_weights, merge, workload_rng)
-from repro.workloads.batch import materialize_round_batch, materialize_rounds
+from repro.workloads.base import (Arrival, Merged, ServiceMix, SizeSpec,
+                                  Workload, edge_weights, merge, workload_rng)
+from repro.workloads.batch import (DEADLINE_INF, materialize_round_batch,
+                                   materialize_rounds)
 from repro.workloads.processes import (DiurnalArrivals, FlashCrowdArrivals,
                                        InhomogeneousPoisson, MMPPArrivals,
                                        PoissonArrivals)
-from repro.workloads.trace import (SCHEMA, SCHEMA_V1, SCHEMA_V2, FaultEvent,
-                                   TraceWorkload, read_trace, record_trace,
-                                   write_trace)
+from repro.workloads.trace import (SCHEMA, SCHEMA_V1, SCHEMA_V2, SCHEMA_V3,
+                                   FaultEvent, TraceWorkload, read_trace,
+                                   record_trace, write_trace)
 from repro.workloads.scenarios import (ScenarioSpec,
                                        instance_config_for_scenario,
                                        list_scenarios, register_scenario,
-                                       scenario, scenario_fault_spec,
-                                       scenario_spec)
+                                       scenario, scenario_cloud_spec,
+                                       scenario_fault_spec, scenario_spec)
 
 __all__ = [
-    "Arrival", "Merged", "SizeSpec", "Workload", "edge_weights", "merge",
-    "workload_rng", "materialize_rounds", "materialize_round_batch",
+    "Arrival", "Merged", "ServiceMix", "SizeSpec", "Workload", "edge_weights",
+    "merge", "workload_rng", "DEADLINE_INF", "materialize_rounds",
+    "materialize_round_batch",
     "PoissonArrivals", "InhomogeneousPoisson", "DiurnalArrivals",
     "FlashCrowdArrivals", "MMPPArrivals",
-    "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "FaultEvent", "TraceWorkload",
-    "read_trace", "record_trace", "write_trace",
+    "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "SCHEMA_V3", "FaultEvent",
+    "TraceWorkload", "read_trace", "record_trace", "write_trace",
     "ScenarioSpec", "register_scenario", "scenario", "scenario_spec",
-    "scenario_fault_spec", "list_scenarios", "instance_config_for_scenario",
+    "scenario_fault_spec", "scenario_cloud_spec", "list_scenarios",
+    "instance_config_for_scenario",
 ]

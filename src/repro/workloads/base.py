@@ -31,12 +31,20 @@ import numpy as np
 @dataclasses.dataclass(frozen=True, order=True)
 class Arrival:
     """One request brief: at time ``t`` a client of edge ``edge`` submits a
-    request of input data size ``size`` for service ``service``."""
+    request of input data size ``size`` for service ``service``.
+
+    Schema-v3 fields (``corais.trace.v3``): ``deadline`` is a *relative*
+    response-time budget in seconds (the request's hard SLO is
+    ``t + deadline``; 0.0 = no deadline) and ``priority`` is a small
+    non-negative importance level (0 = default). Both default to their
+    "absent" values so v1/v2 traces and pre-v3 generators are unchanged."""
 
     t: float
     edge: int
     size: float
     service: int = 0
+    deadline: float = 0.0
+    priority: int = 0
 
 
 @runtime_checkable
@@ -115,6 +123,50 @@ def edge_weights(num_edges: int, skew: float = 0.0,
 
 def pick_edge(rng: np.random.Generator, probs: np.ndarray) -> int:
     return int(rng.choice(len(probs), p=probs))
+
+
+# -- service mixes (schema v3) ----------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServiceMix:
+    """Wrap any workload with a per-request service law plus optional
+    deadline / priority draws — the schema-v3 vocabulary for the edge–cloud
+    tier (service caches key on ``service``; deadlines become hard SLOs).
+
+    Services are drawn Zipf-style: popularity of the k-th service is
+    (k+1)^-skew (skew=0 uniform). ``deadline=(lo, hi)`` attaches a uniform
+    relative response budget to a ``deadline_frac`` fraction of requests;
+    ``priorities`` is a weight vector over levels 0..len-1. Draws interleave
+    deterministically with the inner generator's rng consumption, so the
+    same seed still yields the same stream everywhere (materialized batches,
+    ``MultiEdgeSim.drive``, recorded traces)."""
+
+    inner: Workload
+    num_services: int = 8
+    skew: float = 1.0
+    deadline: tuple = ()
+    deadline_frac: float = 1.0
+    priorities: tuple = ()
+
+    def arrivals(self, rng, num_edges, until):
+        ranks = np.arange(max(1, self.num_services), dtype=np.float64)
+        probs = (ranks + 1.0) ** (-float(self.skew))
+        probs = probs / probs.sum()
+        prio_w = np.asarray(self.priorities, np.float64)
+        if prio_w.size:
+            prio_w = prio_w / prio_w.sum()
+        for a in self.inner.arrivals(rng, num_edges, until):
+            service = int(rng.choice(len(probs), p=probs))
+            d = 0.0
+            if self.deadline:
+                lo, hi = self.deadline
+                take = (self.deadline_frac >= 1.0
+                        or rng.random() < self.deadline_frac)
+                if take:
+                    d = float(rng.uniform(lo, hi))
+            pr = int(rng.choice(prio_w.size, p=prio_w)) if prio_w.size else 0
+            yield dataclasses.replace(a, service=service, deadline=d,
+                                      priority=pr)
 
 
 # -- composition -------------------------------------------------------------

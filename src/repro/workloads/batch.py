@@ -16,6 +16,10 @@ dict of (R, A) arrays ``make_rollout`` scans over:
                       event simulator assigns when driven by the same
                       (workload, seed), which is what trace-equivalence
                       tests key on)
+    service  (R, A) i32  service id per arrival (cache key; 0 default)
+    deadline (R, A) f32  absolute hard-SLO time (arrival.t + relative
+                      budget); DEADLINE_INF for requests with no deadline
+    priority (R, A) f32  importance level (0 default)
     dropped (R,) i32  arrivals clipped from each round by the overflow
                       policy (always 0 with overflow='error'); the engine
                       folds these into its drop accounting so shed-rate
@@ -32,6 +36,10 @@ from typing import Optional
 import numpy as np
 
 from repro.workloads.base import Workload, workload_rng
+
+# "No deadline" sentinel in materialized tensors: matches the engine's INF
+# (serving.engine.INF) so deadline comparisons stay trivially false in f32.
+DEADLINE_INF = 1e30
 
 
 def _bucketize(workload: Workload, num_edges: int, num_rounds: int,
@@ -59,7 +67,9 @@ def _bucketize(workload: Workload, num_edges: int, num_rounds: int,
         # ceil-ing one past R-1, denormal t flooring to -1) — real
         # out-of-horizon arrivals were rejected above
         row = min(max(row, 0), num_rounds - 1)
-        buckets[row].append((a.t, a.edge, a.size, rid))
+        deadline = a.t + a.deadline if a.deadline > 0 else DEADLINE_INF
+        buckets[row].append((a.t, a.edge, a.size, rid, a.service, deadline,
+                             a.priority))
         rid += 1
     return buckets
 
@@ -72,6 +82,9 @@ def _pack(buckets: list[list], width: int, overflow: str) -> dict:
         "size": np.zeros((num_rounds, width), np.float32),
         "mask": np.zeros((num_rounds, width), bool),
         "rid": np.zeros((num_rounds, width), np.int32),
+        "service": np.zeros((num_rounds, width), np.int32),
+        "deadline": np.full((num_rounds, width), DEADLINE_INF, np.float32),
+        "priority": np.zeros((num_rounds, width), np.float32),
         "dropped": np.zeros(num_rounds, np.int32),
     }
     for r, row in enumerate(buckets):
@@ -83,11 +96,14 @@ def _pack(buckets: list[list], width: int, overflow: str) -> dict:
                     f"overflow='clip'")
             out["dropped"][r] = len(row) - width
             row = row[:width]  # overflow == "clip": drop the tail
-        for j, (t, edge, size, rid) in enumerate(row):
+        for j, (t, edge, size, rid, service, deadline, prio) in enumerate(row):
             out["t"][r, j] = t
             out["src"][r, j] = edge
             out["size"][r, j] = size
             out["rid"][r, j] = rid
+            out["service"][r, j] = service
+            out["deadline"][r, j] = deadline
+            out["priority"][r, j] = prio
             out["mask"][r, j] = True
     return out
 

@@ -20,7 +20,9 @@ import dataclasses
 from typing import Callable, Optional
 
 from repro.resilience.faults import FaultSpec
-from repro.workloads.base import SizeSpec, Workload
+from repro.serving.cache import CacheSpec
+from repro.serving.topology import CloudSpec
+from repro.workloads.base import ServiceMix, SizeSpec, Workload
 from repro.workloads.processes import (DiurnalArrivals, FlashCrowdArrivals,
                                        MMPPArrivals, PoissonArrivals)
 
@@ -36,6 +38,10 @@ class ScenarioSpec:
     # Chaos scenarios: the fault process injected alongside the arrivals
     # (materialized per seed by repro.resilience.faults). None = fault-free.
     fault_spec: Optional[FaultSpec] = None
+    # Edge–cloud scenarios: the cloud tier + per-edge service-cache laws
+    # both engines must be configured with (None = flat single-tier).
+    cloud_spec: Optional[CloudSpec] = None
+    cache_spec: Optional[CacheSpec] = None
 
 
 _REGISTRY: dict[str, ScenarioSpec] = {}
@@ -45,12 +51,15 @@ def register_scenario(name: str, factory: Callable[..., Workload], *,
                       description: str = "",
                       instance_overrides: Optional[dict] = None,
                       fault_spec: Optional[FaultSpec] = None,
+                      cloud_spec: Optional[CloudSpec] = None,
+                      cache_spec: Optional[CacheSpec] = None,
                       overwrite: bool = False) -> ScenarioSpec:
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"scenario {name!r} already registered")
     spec = ScenarioSpec(name=name, factory=factory, description=description,
                         instance_overrides=instance_overrides,
-                        fault_spec=fault_spec)
+                        fault_spec=fault_spec, cloud_spec=cloud_spec,
+                        cache_spec=cache_spec)
     _REGISTRY[name] = spec
     return spec
 
@@ -76,6 +85,15 @@ def scenario_fault_spec(name: str) -> Optional[FaultSpec]:
     ``temporal_train`` fault-injects chaos-scenario episodes automatically,
     and ``benchmarks/scenario_sweep.py`` drives both engines with it."""
     return _REGISTRY[name].fault_spec
+
+
+def scenario_cloud_spec(name: str):
+    """The (CloudSpec, CacheSpec) pair a ``cloud-*`` scenario runs under —
+    (None, None) for flat single-tier scenarios. Consumers thread these
+    into ``EngineConfig(cloud=, cache=)`` and ``SimConfig(cloud=, cache=)``
+    so both engines simulate the identical tiered cluster."""
+    spec = _REGISTRY[name]
+    return spec.cloud_spec, spec.cache_spec
 
 
 def list_scenarios() -> dict[str, str]:
@@ -152,6 +170,42 @@ register_scenario(
                                  "mean_sojourn": (2.0, 0.25), **kw}),
     description="2-state Markov-modulated Poisson: calm/burst regime "
                 "switching (classic bursty edge traffic).",
+)
+
+# -- edge–cloud scenarios (tiered topology + service caches, schema v3) ------
+# Arrivals carry service ids, deadlines, and priorities (ServiceMix); the
+# registry also pins the cloud tier + cache laws so every consumer (engine,
+# oracle, sweep, training) simulates the identical tiered cluster.
+
+register_scenario(
+    "cloud-cache-churn",
+    lambda **kw: ServiceMix(
+        PoissonArrivals(rate=kw.pop("rate", 40.0)),
+        **{"num_services": 12, "skew": 0.5, "deadline": (1.0, 3.0), **kw}),
+    description="Miss-heavy tier stress: 12 services churning through "
+                "2-slot edge caches under overload, every request carrying "
+                "a 1-3s deadline. Edges pay 1s cache-aside warm-ups; the "
+                "always-hit cloud pays a 0.4s WAN round-trip instead. "
+                "Deadline-aware, cache-aware dispatch is the whole game.",
+    cloud_spec=CloudSpec(wan_rtt=0.4, wan_dist=1.5, lanes=12,
+                         phi_a=0.2, phi_b=0.02),
+    cache_spec=CacheSpec(slots=2, miss_penalty=1.0, num_services=12),
+)
+
+register_scenario(
+    "cloud-burst-offload",
+    lambda **kw: ServiceMix(
+        MMPPArrivals(rates=kw.pop("rates", (8.0, 90.0)),
+                     mean_sojourn=kw.pop("mean_sojourn", (2.0, 0.3))),
+        **{"num_services": 6, "skew": 1.2, "deadline": (1.5, 4.0),
+           "priorities": (3.0, 1.0), **kw}),
+    description="Bursty MMPP traffic against a 16-lane cloud: calm phases "
+                "fit on the edges (popular services stay cached), bursts "
+                "must spill to the WAN. Tests elastic offload timing under "
+                "deadlines and mixed priorities.",
+    cloud_spec=CloudSpec(wan_rtt=0.3, wan_dist=1.2, lanes=16,
+                         phi_a=0.25, phi_b=0.03),
+    cache_spec=CacheSpec(slots=3, miss_penalty=0.6, num_services=6),
 )
 
 # -- chaos scenarios (resilience subsystem) ----------------------------------

@@ -26,6 +26,19 @@ A trace without fault events is always written under the v1 schema, byte
 for byte what pre-v2 code produced, and v1 files read back unchanged —
 ``fault_events`` is just empty. ``repro.resilience.faults`` converts
 between these records and the engine's per-round event tensors.
+
+Schema v3 adds optional per-event ``deadline`` (relative response budget in
+seconds; the hard SLO is ``t + deadline``) and ``priority`` (small integer
+importance level) fields, written only when nonzero:
+
+    {"schema": "corais.trace.v3", "num_edges": 5, "meta": {...}}
+    {"t": 0.0123, "edge": 3, "size": 0.4567, "service": 2,
+     "deadline": 1.5, "priority": 1}
+
+Downgrade is byte-exact: a stream with no deadlines/priorities writes the
+same v2 bytes (faults present) or v1 bytes (fault-free) that pre-v3 code
+produced, and every older file reads back unchanged under the v3 reader —
+the new :class:`Arrival` fields just hold their defaults.
 """
 from __future__ import annotations
 
@@ -39,8 +52,9 @@ from repro.workloads.base import Arrival, Workload, workload_rng
 
 SCHEMA_V1 = "corais.trace.v1"
 SCHEMA_V2 = "corais.trace.v2"
+SCHEMA_V3 = "corais.trace.v3"
 SCHEMA = SCHEMA_V1  # default write schema (used when a trace has no faults)
-_SUPPORTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2)
+_SUPPORTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3)
 
 FAULT_KINDS = ("fail", "recover", "straggle")
 
@@ -89,25 +103,36 @@ def write_trace(path: str, arrivals: Iterable[Arrival], *, num_edges: int,
                 meta: Optional[dict] = None,
                 fault_events: Sequence[FaultEvent] = ()) -> int:
     """Write arrivals (any iterable, consumed once) as a JSONL trace.
-    Returns the number of events written. With ``fault_events`` the header
-    is stamped ``corais.trace.v2`` and carries the fault timeline; without
-    them the file is a byte-identical v1 trace."""
-    n = 0
+    Returns the number of events written. The schema is the lowest version
+    that can express the stream: any deadline/priority field stamps
+    ``corais.trace.v3``, else ``fault_events`` stamp ``corais.trace.v2``,
+    else the file is a byte-identical v1 trace."""
+    events = list(arrivals)
+    has_v3 = any(a.deadline or a.priority for a in events)
+    if has_v3:
+        schema = SCHEMA_V3
+    elif fault_events:
+        schema = SCHEMA_V2
+    else:
+        schema = SCHEMA_V1
     with open(path, "w") as f:
-        header = {"schema": SCHEMA_V2 if fault_events else SCHEMA_V1,
+        header = {"schema": schema,
                   "num_edges": int(num_edges), "meta": meta or {}}
         if fault_events:
             header["events"] = [_fault_row(ev, num_edges)
                                 for ev in fault_events]
         f.write(json.dumps(header) + "\n")
-        for a in arrivals:
+        for a in events:
             row = {"t": float(a.t), "edge": int(a.edge),
                    "size": float(a.size)}
             if a.service:
                 row["service"] = int(a.service)
+            if a.deadline:
+                row["deadline"] = float(a.deadline)
+            if a.priority:
+                row["priority"] = int(a.priority)
             f.write(json.dumps(row) + "\n")
-            n += 1
-    return n
+    return len(events)
 
 
 def record_trace(path: str, workload: Workload, *, num_edges: int,
@@ -180,9 +205,16 @@ def read_trace(path: str) -> TraceWorkload:
             if not line.strip():
                 continue
             row = json.loads(line)
+            if schema != SCHEMA_V3 and ("deadline" in row
+                                        or "priority" in row):
+                raise ValueError(
+                    f"{path}:{lineno}: deadline/priority fields require "
+                    f"{SCHEMA_V3}")
             a = Arrival(t=float(row["t"]), edge=int(row["edge"]),
                         size=float(row["size"]),
-                        service=int(row.get("service", 0)))
+                        service=int(row.get("service", 0)),
+                        deadline=float(row.get("deadline", 0.0)),
+                        priority=int(row.get("priority", 0)))
             n_edges = int(header.get("num_edges", 0))
             if n_edges and not 0 <= a.edge < n_edges:
                 raise ValueError(f"{path}:{lineno}: edge {a.edge} outside "

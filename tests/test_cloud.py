@@ -1,0 +1,280 @@
+"""Edge–cloud tier, service caches, and schema-v3 request fields.
+
+The tentpole contract: with a CloudSpec/CacheSpec pair from the scenario
+registry, the event-driven oracle and the batched engine simulate the
+*identical* tiered cluster — cache hits/misses, cloud offloads, and
+deadline-miss counts agree exactly, per-request finish times to 1e-4.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import (EDGE_FEATURES, REQ_FEATURES,
+                               TIER_EDGE_FEATURES, TIER_REQ_FEATURES,
+                               PolicyConfig, corais_apply, corais_init,
+                               edge_feature_dim, req_feature_dim)
+from repro.serving import engine
+from repro.serving.cache import CacheSpec, HostCache, cache_commit, initial_cache
+from repro.serving.simulator import MultiEdgeSim, SimConfig
+from repro.workloads.batch import materialize_rounds
+from repro.workloads.scenarios import scenario, scenario_cloud_spec
+
+DT = 0.25
+
+CLOUD_CASES = [
+    ("cloud-cache-churn", 4, 16, 3),
+    ("cloud-burst-offload", 5, 20, 7),
+]
+
+
+class _ScriptedController:
+    """Oracle twin of the engine-side scripted hash over N = Q + 1 nodes."""
+
+    last_decision_time = 0.0
+
+    def __init__(self, num_nodes):
+        self.n = num_nodes
+
+    def schedule(self, edges, pending, w, ct):
+        return [(r, (r.rid * 7 + 3) % self.n) for r in pending]
+
+
+def _run_pair(name, q, rounds, seed):
+    cloud, cache = scenario_cloud_spec(name)
+    assert cloud is not None and cache is not None
+    n = q + 1
+    cfg = engine.EngineConfig(num_edges=q, num_rounds=rounds,
+                              round_interval=DT, max_per_round=64,
+                              cloud=cloud, cache=cache)
+    arr = materialize_rounds(scenario(name), q, rounds, DT, seed=seed,
+                             max_per_round=64)
+
+    def assign(key, inst):
+        return ((inst["req_rid"] * 7 + 3) % n).astype(jnp.int32)
+
+    run = engine.make_rollout(cfg, assign)
+    final, _ = run(engine.init_state(cfg, seed=seed), arr,
+                   jax.random.PRNGKey(0))
+    final = jax.device_get(final)
+
+    sim = MultiEdgeSim(
+        SimConfig(num_edges=q, round_interval=DT, seed=seed, exec_noise=0.0,
+                  phi_oracle=True, cloud=cloud, cache=cache),
+        _ScriptedController(n))
+    m = sim.drive(scenario(name), until=rounds * DT, run_until=1e5, seed=seed)
+    return cfg, arr, final, sim, m
+
+
+@pytest.mark.parametrize("name,q,rounds,seed", CLOUD_CASES)
+def test_cloud_equivalence_with_event_sim(name, q, rounds, seed):
+    cfg, arr, final, sim, m = _run_pair(name, q, rounds, seed)
+    s = engine.summarize(final)
+
+    # everything drains in both engines
+    assert m["completed"] == m["submitted"] == s["completed"] > 0
+    assert s["stranded_requests"] == 0
+
+    # tier/cache/deadline counters agree exactly
+    for k in ("cache_hits", "cache_misses", "cloud_completed",
+              "deadline_total", "deadline_missed", "transferred",
+              "completed"):
+        assert s[k] == m[k], (k, s[k], m[k])
+    assert s["cache_misses"] > 0 and s["cache_hits"] > 0
+    assert s["cloud_completed"] > 0          # the hash does offload
+    assert s["deadline_total"] == s["completed"]  # every arrival has one
+
+    # per-request finish times match to the acceptance tolerance
+    mask = np.asarray(arr["mask"]).ravel()
+    rids = np.asarray(arr["rid"]).ravel()[mask]
+    committed = final["slot_edge"].ravel() >= 0
+    fin_engine = final["slot_finish"].ravel()[committed]
+    oracle = {r.rid: r.finish_time for e in sim.edges for r in e.completed}
+    fin_oracle = np.array([oracle[r] for r in rids])
+    np.testing.assert_allclose(fin_engine, fin_oracle, rtol=1e-5, atol=1e-4)
+
+    # deadline/cache fracs derive from the same counts
+    assert s["deadline_miss_frac"] == pytest.approx(m["deadline_miss_frac"])
+    assert s["cache_hit_rate"] == pytest.approx(m["cache_hit_rate"])
+    assert s["cloud_offload_frac"] == pytest.approx(m["cloud_offload_frac"])
+
+
+@pytest.mark.parametrize("name,q,rounds,seed", CLOUD_CASES)
+def test_unified_summary_schema(name, q, rounds, seed):
+    """Satellite: every summary producer returns the one SUMMARY_KEYS
+    schema — engine summarize, reduced partials, and the oracle (plus its
+    decision_* extras) — so benchmarks never special-case the source."""
+    cfg, arr, final, sim, m = _run_pair(name, q, rounds, seed)
+    s = engine.summarize(final)
+    p = engine.partials_to_summary(engine.summarize_partials(final))
+
+    assert sorted(s) == sorted(engine.SUMMARY_KEYS)
+    assert sorted(p) == sorted(engine.SUMMARY_KEYS)
+    assert set(engine.SUMMARY_KEYS) <= set(m)  # oracle adds decision_*
+
+    # the two engine-side producers agree on every exact (non-histogram) key
+    for k in engine.SUMMARY_KEYS:
+        if k in ("p50_response", "p95_response"):  # histogram estimates
+            continue
+        if isinstance(s[k], float):
+            assert p[k] == pytest.approx(s[k], rel=1e-6), k
+        else:
+            assert p[k] == s[k], k
+
+
+def test_summary_schema_zero_completions():
+    cfg = engine.EngineConfig(num_edges=3, num_rounds=2, max_per_round=4)
+    s = engine.summarize(engine.init_state(cfg, seed=0))
+    assert sorted(s) == sorted(engine.SUMMARY_KEYS)
+    assert s["completed"] == 0 and s["per_edge_completed"] == {}
+    p = engine.partials_to_summary(
+        engine.summarize_partials(engine.init_state(cfg, seed=0)))
+    assert sorted(p) == sorted(engine.SUMMARY_KEYS)
+    sim = MultiEdgeSim(SimConfig(num_edges=3), _ScriptedController(3))
+    assert set(engine.SUMMARY_KEYS) <= set(sim.metrics())
+
+
+def test_host_cache_matches_cache_commit():
+    """FIFO cache-aside parity: random (node, service) access sequences
+    produce identical hit patterns and final cache contents."""
+    rng = np.random.default_rng(0)
+    q, slots, services = 4, 3, 9
+    spec = CacheSpec(slots=slots, miss_penalty=0.5, num_services=services)
+    host = HostCache(q + 1, q, spec)
+    cache = jnp.asarray(initial_cache(q + 1, q, spec))
+    ptr = jnp.zeros(q + 1, jnp.int32)
+    for _ in range(20):  # 20 rounds of 8 accesses
+        nodes = rng.integers(0, q + 1, size=8)
+        svcs = rng.integers(0, services, size=8)
+        on = rng.random(8) < 0.9
+        host_hits = [host.access(nd, sv) if o else False
+                     for nd, sv, o in zip(nodes, svcs, on)]
+        cache, ptr, hit = cache_commit(cache, ptr, jnp.asarray(nodes),
+                                       jnp.asarray(svcs), jnp.asarray(on), q)
+        assert np.asarray(hit).tolist() == host_hits
+    np.testing.assert_array_equal(np.asarray(cache), host.cache)
+    np.testing.assert_array_equal(np.asarray(ptr), host.ptr)
+    assert host.hits > 0 and host.misses > 0
+
+
+def test_cloud_always_hits_and_never_installs():
+    q = 2
+    spec = CacheSpec(slots=2, num_services=6, warm=False)
+    host = HostCache(q + 1, q, spec)
+    assert host.access(q, 5)          # cloud: hit with a cold cache
+    assert (host.cache[q] == -1).all()  # and nothing installed
+    assert not host.access(0, 5)      # edge: cold miss installs
+    assert host.access(0, 5)
+
+
+def test_second_same_service_miss_becomes_hit_in_round():
+    """Two same-service dispatches to one cold edge in one round: the first
+    misses and installs, the second hits — in both implementations."""
+    q = 2
+    spec = CacheSpec(slots=2, num_services=6, warm=False)
+    host = HostCache(q + 1, q, spec)
+    assert [host.access(1, 4), host.access(1, 4)] == [False, True]
+    cache = jnp.asarray(initial_cache(q + 1, q, spec))
+    ptr = jnp.zeros(q + 1, jnp.int32)
+    _, _, hit = cache_commit(cache, ptr, jnp.asarray([1, 1]),
+                             jnp.asarray([4, 4]), jnp.asarray([True, True]), q)
+    assert np.asarray(hit).tolist() == [False, True]
+
+
+def test_extend_cluster_with_cloud_row():
+    from repro.serving.rounds import extend_cluster_with_cloud, sample_cluster
+    from repro.serving.topology import CloudSpec
+    base = sample_cluster(5, 4, 0.2, 1.0, seed=0)
+    cloud = CloudSpec(wan_rtt=0.4, wan_dist=1.5, lanes=12, phi_a=0.2,
+                      phi_b=0.02)
+    ext = extend_cluster_with_cloud(base, cloud)
+    assert ext.w.shape == (6, 6)
+    np.testing.assert_array_equal(ext.w[:5, :5], base.w)
+    assert (ext.w[:5, 5] == 1.5).all() and (ext.w[5, :5] == 1.5).all()
+    assert ext.true_a[5] == 0.2 and ext.true_b[5] == 0.02
+    assert ext.replicas[5] == 12
+
+
+def test_flat_tier_state_unchanged_by_v3_fields():
+    """Schema-v3 columns are inert without cloud/cache: a flat rollout's
+    physics are identical to what the same seed produced before."""
+    cfg = engine.EngineConfig(num_edges=4, num_rounds=8, max_per_round=16)
+    arr = materialize_rounds(scenario("uniform_iid"), 4, 8, DT, seed=5,
+                             max_per_round=16)
+
+    def assign(key, inst):
+        return ((inst["req_rid"] * 7 + 3) % 4).astype(jnp.int32)
+
+    final, _ = engine.make_rollout(cfg, assign)(
+        engine.init_state(cfg, seed=5), arr, jax.random.PRNGKey(0))
+    s = engine.summarize(jax.device_get(final))
+    assert s["cloud_completed"] == 0 and s["cache_hits"] == 0
+    assert s["deadline_total"] == 0 and s["deadline_miss_frac"] == 0.0
+    sim = MultiEdgeSim(SimConfig(num_edges=4, round_interval=DT, seed=5,
+                                 exec_noise=0.0, phi_oracle=True),
+                       _ScriptedController(4))
+    m = sim.drive(scenario("uniform_iid"), until=8 * DT, run_until=1e5, seed=5)
+    assert m["completed"] == s["completed"] > 0
+    assert abs(m["mean_response"] - s["mean_response"]) < 1e-4
+
+
+# -- policy tier features -----------------------------------------------------
+
+
+def test_tier_feature_dims_and_forward():
+    flat = PolicyConfig(d_model=32, num_heads=2, edge_layers=1,
+                        request_layers=1, ff_hidden=32)
+    tier = PolicyConfig(d_model=32, num_heads=2, edge_layers=1,
+                        request_layers=1, ff_hidden=32, tier_features=True)
+    assert edge_feature_dim(flat) == EDGE_FEATURES
+    assert req_feature_dim(flat) == REQ_FEATURES
+    assert edge_feature_dim(tier) == EDGE_FEATURES + TIER_EDGE_FEATURES
+    assert req_feature_dim(tier) == REQ_FEATURES + TIER_REQ_FEATURES
+
+    params, state = corais_init(jax.random.PRNGKey(0), tier)
+    assert params["edge_proj"]["w"].shape[0] == EDGE_FEATURES + TIER_EDGE_FEATURES
+    assert params["req_proj"]["w"].shape[0] == REQ_FEATURES + TIER_REQ_FEATURES
+
+    # a v3 engine instance feeds the new features through the forward
+    name, q, rounds, seed = CLOUD_CASES[0]
+    cloud, cache = scenario_cloud_spec(name)
+    cfg = engine.EngineConfig(num_edges=q, num_rounds=rounds,
+                              round_interval=DT, max_per_round=64,
+                              cloud=cloud, cache=cache)
+    arr = materialize_rounds(scenario(name), q, rounds, DT, seed=seed,
+                             max_per_round=64)
+    st = engine.init_state(cfg, seed=seed)
+    inst = engine.round_instance(
+        jax.tree.map(jnp.asarray, st),
+        {k: jnp.asarray(v[0]) for k, v in arr.items()}, cfg)
+    for k in ("tier", "req_slack", "req_priority", "cache_frac",
+              "req_cached"):
+        assert k in inst, k
+    lp, _ = corais_apply(params, state, inst, tier)
+    assert lp.shape == (64, q + 1)
+    assert bool(jnp.all(jnp.isfinite(lp[jnp.asarray(arr["mask"][0])])))
+
+    # legacy instances (no tier keys) run with zero fallbacks
+    legacy = {k: v for k, v in inst.items()
+              if k not in ("tier", "req_slack", "req_priority",
+                           "cache_frac", "req_cached")}
+    lp2, _ = corais_apply(params, state, legacy, tier)
+    assert lp2.shape == lp.shape
+
+
+def test_deadline_slack_feature_is_capped():
+    name, q, rounds, seed = CLOUD_CASES[0]
+    cloud, cache = scenario_cloud_spec(name)
+    cfg = engine.EngineConfig(num_edges=q, num_rounds=rounds,
+                              round_interval=DT, max_per_round=64,
+                              cloud=cloud, cache=cache)
+    arr = materialize_rounds(scenario(name), q, rounds, DT, seed=seed,
+                             max_per_round=64)
+    st = engine.init_state(cfg, seed=seed)
+    inst = engine.round_instance(
+        jax.tree.map(jnp.asarray, st),
+        {k: jnp.asarray(v[0]) for k, v in arr.items()}, cfg)
+    slack = np.asarray(inst["req_slack"])
+    assert (slack >= 0).all() and (slack <= engine.SLACK_CAP).all()
+    mask = np.asarray(arr["mask"][0])
+    assert (slack[mask] > 0).any()

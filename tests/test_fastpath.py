@@ -106,10 +106,10 @@ def test_fastpath_modes_and_donation_default(policy):
     params, state = policy
     # greedy default resolves normalize off; sample keeps true log-probs
     fp_g = DecisionFastPath(params, state, CFG, buckets=((8, 32),))
-    assert fp_g._fn_kwargs["normalize"] is False
+    assert fp_g.spec.normalize is False
     fp_s = DecisionFastPath(params, state, CFG, buckets=((8, 32),),
                             mode="sample", num_samples=8)
-    assert fp_s._fn_kwargs["normalize"] is True
+    assert fp_s.spec.normalize is True
     a = fp_s.decide(_inst(5, 20, 3))
     assert a.shape == (20,) and a.max() < 5
     # CPU resolves donate off automatically (jax can't donate on cpu)

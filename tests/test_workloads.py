@@ -7,15 +7,18 @@ import pytest
 from repro.core import InstanceConfig, generate_instance
 from repro.serving import (CentralController, MultiEdgeSim, SimConfig,
                            nearest_alive_edge)
-from repro.workloads import (SCHEMA_V1, SCHEMA_V2, DiurnalArrivals,
+from repro.workloads import (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, DiurnalArrivals,
                              FaultEvent, FlashCrowdArrivals, MMPPArrivals,
-                             PoissonArrivals, SizeSpec,
+                             PoissonArrivals, ServiceMix, SizeSpec,
                              instance_config_for_scenario, list_scenarios,
                              merge, read_trace, record_trace, scenario,
                              scenario_fault_spec, scenario_spec, write_trace)
 
 TIMING_KEYS = ("scheduler_decision_s", "decision_mean_s", "decision_p95_s",
                "decision_max_s")
+
+import pathlib
+DATA = pathlib.Path(__file__).parent / "data"
 
 
 def _completion(m):
@@ -140,8 +143,83 @@ def test_read_trace_rejects_bad_schema(tmp_path):
     path = str(tmp_path / "bad.jsonl")
     with open(path, "w") as f:
         f.write('{"schema": "corais.trace.v999"}\n')
-    with pytest.raises(ValueError, match="unsupported trace schema"):
+    # the error names every supported version, so a stale reader's message
+    # tells the operator exactly what their file could be migrated to
+    with pytest.raises(ValueError) as exc:
         read_trace(path)
+    for schema in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3):
+        assert schema in str(exc.value)
+
+
+# -- schema v3 (deadlines / priorities) migration -----------------------------
+
+def test_trace_v3_round_trip_bit_exact(tmp_path):
+    """A deadline/priority-carrying stream stamps v3 and round-trips every
+    field bit-exactly (repr floats)."""
+    path = str(tmp_path / "v3.jsonl")
+    wl = ServiceMix(PoissonArrivals(rate=30.0), num_services=5, skew=0.7,
+                    deadline=(1.0, 2.5), priorities=(2.0, 1.0))
+    rng = np.random.default_rng(4)
+    events = list(wl.arrivals(rng, 4, 3.0))
+    assert any(a.deadline > 0 for a in events)
+    assert any(a.priority for a in events)
+    write_trace(path, events, num_edges=4)
+    tr = read_trace(path)
+    assert tr.schema == SCHEMA_V3
+    assert list(tr.events) == events
+
+
+def test_trace_v3_downgrade_byte_exact(tmp_path):
+    """The v3-capable writer is a byte-exact downgrader: a stream with no
+    deadlines/priorities produces the identical v1 (or, with faults, v2)
+    bytes pre-v3 code wrote."""
+    plain = str(tmp_path / "plain.jsonl")
+    record_trace(plain, scenario("uniform_iid"), num_edges=4, until=2.0,
+                 seed=42)
+    assert read_trace(plain).schema == SCHEMA_V1
+    assert open(plain, "rb").read() == open(DATA / "trace_v1.jsonl", "rb").read()
+
+
+def test_pre_v3_files_read_under_v3_reader(tmp_path):
+    """Committed v1/v2 fixture traces (recorded before any v3 fields
+    existed in their streams) read back unchanged: defaults fill the new
+    Arrival fields and a replay drives the sim end to end."""
+    for path, schema in ((DATA / "trace_v1.jsonl", SCHEMA_V1),
+                         (DATA / "trace_v2.jsonl", SCHEMA_V2)):
+        tr = read_trace(path)
+        assert tr.schema == schema
+        assert tr.num_edges == 4 and len(tr.events) > 0
+        assert all(a.deadline == 0.0 and a.priority == 0 for a in tr.events)
+    tr2 = read_trace(DATA / "trace_v2.jsonl")
+    assert len(tr2.fault_events) > 0
+    sim = MultiEdgeSim(SimConfig(num_edges=4, seed=0),
+                       CentralController(scheduler="greedy"))
+    m = sim.drive(read_trace(DATA / "trace_v1.jsonl"), until=2.0,
+                  run_until=300.0)
+    assert m["completed"] == m["submitted"] > 0
+
+
+def test_pre_v3_schemas_reject_v3_fields(tmp_path):
+    path = str(tmp_path / "smuggle.jsonl")
+    with open(path, "w") as f:
+        f.write('{"schema": "corais.trace.v1", "num_edges": 3}\n')
+        f.write('{"t": 0.1, "edge": 0, "size": 0.5, "deadline": 1.0}\n')
+    with pytest.raises(ValueError, match="corais.trace.v3"):
+        read_trace(path)
+
+
+def test_v3_deadlines_thread_into_sim_metrics():
+    """drive() converts relative trace deadlines to absolute hard-SLO
+    times; the unified metrics expose the miss accounting."""
+    wl = ServiceMix(PoissonArrivals(rate=30.0), num_services=4,
+                    deadline=(0.5, 1.0))
+    sim = MultiEdgeSim(SimConfig(num_edges=4, seed=0),
+                       CentralController(scheduler="greedy"))
+    m = sim.drive(wl, until=2.0, run_until=300.0, seed=0)
+    assert m["deadline_total"] == m["submitted"] > 0
+    assert 0.0 <= m["deadline_miss_frac"] <= 1.0
+    assert m["deadline_missed"] == round(
+        m["deadline_miss_frac"] * m["deadline_total"])
 
 
 def test_trace_v2_fault_events_round_trip(tmp_path):
