@@ -1,0 +1,132 @@
+"""Guard training throughput in CI: scanned-epoch regression tripwire.
+
+Compares per-(mode, scenario, batch, rounds) batches/sec from a fresh
+``train_throughput.py --smoke`` report against the committed baseline
+(``benchmarks/train_throughput_baseline.json``) and exits non-zero when
+any cell got slower than ``baseline / --factor`` (default 4x). Like
+``check_latency_drift.py``, the generous factor absorbs runner variance —
+this catches order-of-magnitude regressions (the epoch scan silently
+falling back to per-update dispatch, device episode generation dropping
+back to host numpy, a retrace per chunk), not percent-level noise.
+
+Baseline cells missing from the fresh report fail by default (a dropped
+mode or renamed scenario would otherwise pass forever); pass
+``--allow-missing`` during an intentional grid shrink. Report cells with
+no baseline (e.g. the sharded mode on a runner with more devices) are
+printed and skipped.
+
+Run:  HOST_DEVICES=8 benchmarks/run_hw.sh train_throughput --smoke \\
+          --out results/train_throughput_smoke.json
+      PYTHONPATH=src python benchmarks/check_train_throughput.py
+
+Refresh the committed baseline after an intentional change:
+
+      PYTHONPATH=src python benchmarks/check_train_throughput.py \\
+          --write-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+BASELINE_SCHEMA = "corais.train_throughput_baseline.v1"
+REPORT_SCHEMA = "corais.train_throughput.v1"
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_REPORT = os.path.join(HERE, "..", "results",
+                              "train_throughput_smoke.json")
+DEFAULT_BASELINE = os.path.join(HERE, "train_throughput_baseline.json")
+
+
+def _key(cell: dict) -> tuple:
+    return (cell["mode"], cell["scenario"], int(cell["batch_size"]),
+            int(cell["num_rounds"]))
+
+
+def load_report_cells(path: str) -> dict:
+    with open(path) as f:
+        report = json.load(f)
+    if report.get("schema") != REPORT_SCHEMA:
+        raise SystemExit(f"error: {path} is not a {REPORT_SCHEMA} report")
+    return {_key(c): float(c["batches_per_sec"]) for c in report["cells"]}
+
+
+def write_baseline(report_path: str, baseline_path: str) -> None:
+    cells = load_report_cells(report_path)
+    payload = {
+        "schema": BASELINE_SCHEMA,
+        "source_report": os.path.basename(report_path),
+        "cells": [{"mode": m, "scenario": s, "batch_size": b,
+                   "num_rounds": r, "batches_per_sec": v}
+                  for (m, s, b, r), v in sorted(cells.items())],
+    }
+    with open(baseline_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"baseline written to {os.path.abspath(baseline_path)} "
+          f"({len(cells)} cells)")
+
+
+def check(report_path: str, baseline_path: str, *, factor: float,
+          allow_missing: bool = False) -> int:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    if baseline.get("schema") != BASELINE_SCHEMA:
+        print(f"error: {baseline_path} is not a {BASELINE_SCHEMA} file")
+        return 2
+    base = {_key(c): float(c["batches_per_sec"]) for c in baseline["cells"]}
+    current = load_report_cells(report_path)
+    common = sorted(set(base) & set(current))
+    if not common:
+        print("error: no overlapping (mode, scenario, batch, rounds) cells "
+              "between report and baseline — regenerate one of them")
+        return 2
+
+    failures = []
+    for key in common:
+        limit = base[key] / factor
+        status = "ok" if current[key] >= limit else "SLOWDOWN"
+        if status != "ok":
+            failures.append(key)
+        m, s, b, r = key
+        print(f"  {m:10s} {s:22s} B={b:3d} R={r:3d} "
+              f"{current[key]:8.3f} b/s  baseline={base[key]:8.3f}  "
+              f"floor={limit:8.3f}  {status}")
+    for m, s, b, r in sorted(set(current) - set(base)):
+        print(f"  {m:10s} {s:22s} B={b:3d} R={r:3d} "
+              f"(no baseline cell, skipped)")
+    missing = sorted(set(base) - set(current))
+    for m, s, b, r in missing:
+        print(f"  {m:10s} {s:22s} B={b:3d} R={r:3d} "
+              f"(baseline cell MISSING from report)")
+    if failures:
+        print(f"FAIL: {len(failures)}/{len(common)} cells slower than "
+              f"baseline/{factor:.1f}")
+        return 1
+    if missing and not allow_missing:
+        print(f"FAIL: {len(missing)} baseline cell(s) missing from the "
+              f"report — regenerate it over the full grid or pass "
+              f"--allow-missing for an intentional shrink")
+        return 1
+    print(f"OK: {len(common)} cells within {factor:.1f}x of baseline"
+          + (f" ({len(missing)} missing allowed)" if missing else ""))
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--report", default=DEFAULT_REPORT)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--factor", type=float, default=4.0)
+    ap.add_argument("--allow-missing", action="store_true")
+    ap.add_argument("--write-baseline", action="store_true")
+    args = ap.parse_args()
+    if args.write_baseline:
+        write_baseline(args.report, args.baseline)
+        return 0
+    return check(args.report, args.baseline, factor=args.factor,
+                 allow_missing=args.allow_missing)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -90,6 +90,10 @@ def get_temporal_policy(en: int = 5, batches: int = 200,
         lr=3e-4,
         num_batches=batches,
         seed=0,
+        # scanned-epoch trainer: episodes drawn in-jit, 25 updates per
+        # dispatch, metrics drained (and logged) once per epoch
+        device_episodes=True,
+        epoch_len=25,
     )
     tag = f"policy_temporal_en{en}_d{d_model}_b{batches}_{scenario_name}"
     ckpt = Checkpointer(os.path.join(RESULTS, tag), every=10**9,
@@ -104,8 +108,8 @@ def get_temporal_policy(en: int = 5, batches: int = 200,
         return restored["tree"]["params"], restored["tree"]["state"], cfg
 
     t0 = time.time()
-    cb = (lambda m: print(f"#   batch {m['batch']} cost {m['cost_mean']:.3f}")) \
-        if verbose else None
+    cb = (lambda m: print(f"#   epoch to batch {m['batch']} "
+                          f"cost {m['cost_mean']:.3f}")) if verbose else None
     params, state, _, hist = temporal_train(cfg, callback=cb)
     if verbose:
         print(f"# temporal-trained {batches} batches in {time.time()-t0:.0f}s "
@@ -157,6 +161,8 @@ def get_resilient_policy(en: int = 5, batches: int = 300,
         slo=slo,
         slo_penalty=slo_penalty,
         freeze_dispatch=True,
+        device_episodes=True,
+        epoch_len=25,
     )
     tag = (f"policy_resilient_admit_en{en}_d{d_model}_b{batches}_"
            f"{scenario_name}")
@@ -178,7 +184,8 @@ def get_resilient_policy(en: int = 5, batches: int = 300,
     state = sstate
 
     t0 = time.time()
-    cb = (lambda m: print(f"#   batch {m['batch']} cost {m['cost_mean']:.3f} "
+    cb = (lambda m: print(f"#   epoch to batch {m['batch']} "
+                          f"cost {m['cost_mean']:.3f} "
                           f"shed {m['shed']:.1f}")) if verbose else None
     params, state, _, hist = temporal_train(cfg, params=params, state=state,
                                             callback=cb)
@@ -228,6 +235,8 @@ def get_cloud_policy(en: int = 5, batches: int = 300,
         num_batches=batches,
         seed=0,
         deadline_penalty=deadline_penalty,
+        device_episodes=True,
+        epoch_len=25,
     )
     tag = f"policy_cloud_en{en}_d{d_model}_b{batches}_{scenario_name}"
     ckpt = Checkpointer(os.path.join(RESULTS, tag), every=10**9,
@@ -252,7 +261,8 @@ def get_cloud_policy(en: int = 5, batches: int = 300,
     state = sstate
 
     t0 = time.time()
-    cb = (lambda m: print(f"#   batch {m['batch']} cost {m['cost_mean']:.3f} "
+    cb = (lambda m: print(f"#   epoch to batch {m['batch']} "
+                          f"cost {m['cost_mean']:.3f} "
                           f"dl_miss {m.get('deadline_miss_frac', 0.0):.3f}")) \
         if verbose else None
     params, state, _, hist = temporal_train(cfg, params=params, state=state,

@@ -18,9 +18,21 @@ def global_norm(tree) -> jax.Array:
 
 
 def clip_by_global_norm(tree, max_norm: float):
+    """Scale ``tree`` so its global norm is at most ``max_norm``. Returns
+    (clipped tree, raw norm). A non-finite norm (an inf/nan gradient leaf)
+    zeroes the whole update instead of poisoning it — ``inf * 0`` under the
+    naive scale is nan, which an Adam step would write into every
+    parameter; dropping the step keeps training recoverable and the raw
+    norm still reports the blow-up."""
     norm = global_norm(tree)
-    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
-    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+    scale = jnp.where(jnp.isfinite(norm),
+                      jnp.minimum(1.0, max_norm / (norm + 1e-12)), 0.0)
+
+    def clip(x):
+        c = x.astype(jnp.float32) * scale
+        return jnp.where(jnp.isfinite(c), c, 0.0).astype(x.dtype)
+
+    return jax.tree.map(clip, tree), norm
 
 
 def quantize_int8(x: jax.Array):

@@ -204,6 +204,114 @@ def attach_fault_batch(arrivals: dict, spec: FaultSpec, num_edges: int,
     return {k: np.stack([m[k] for m in merged]) for k in merged[0]}
 
 
+# -- device-resident fault materialization (pure jax.random) -----------------
+
+def _scripted_overrides(spec: FaultSpec, num_edges: int,
+                        num_rounds: int) -> tuple:
+    """Static (host numpy) parts of a fault trajectory: scripted/rolling
+    outage masks and scripted straggler overrides, identical to the
+    override pass in :func:`materialize_faults`."""
+    alive_ok = np.ones((num_rounds, num_edges), bool)
+    scripted = list(spec.scripted_failures)
+    if spec.rolling is not None:
+        start, dur = spec.rolling
+        scripted += [(q, start + q * dur, start + (q + 1) * dur)
+                     for q in range(num_edges)]
+    for q, lo, hi in scripted:
+        alive_ok[max(lo, 0):hi, q % num_edges] = False
+    speed_mask = np.zeros((num_rounds, num_edges), bool)
+    speed_val = np.ones((num_rounds, num_edges), np.float32)
+    for q, lo, hi, factor in spec.scripted_stragglers:
+        speed_mask[max(lo, 0):hi, q % num_edges] = True
+        speed_val[max(lo, 0):hi, q % num_edges] = factor
+    return alive_ok, speed_mask, speed_val
+
+
+def materialize_faults_device(spec: FaultSpec, num_edges: int,
+                              num_rounds: int, key) -> dict:
+    """Device twin of :func:`materialize_faults`: same fault laws (Markov
+    fail/recover with the min_alive refusal in edge order, straggler churn,
+    scripted/rolling overrides, min_alive floor), drawn with ``jax.random``
+    inside the trace. Distributionally equivalent to the host path, not
+    draw-for-draw — the chaos *equivalence* tests keep pinning the host
+    tensors; this path exists so training episodes stay on device."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    Q, R = num_edges, num_rounds
+    alive_ok, spd_mask, spd_val = _scripted_overrides(spec, Q, R)
+    alive_ok = jnp.asarray(alive_ok)
+    spd_mask, spd_val = jnp.asarray(spd_mask), jnp.asarray(spd_val)
+
+    def markov_fail(up, u_fail, u_rec):
+        # sequential in edge order: each failure sees the up-count left by
+        # the previous edges' transitions, exactly as the host loop does
+        def body(q, up):
+            can_fail = (up[q] & (u_fail[q] < spec.fail_prob)
+                        & (jnp.sum(up) > spec.min_alive))
+            rec = (~up[q]) & (u_rec[q] < spec.recover_prob)
+            return up.at[q].set(jnp.where(can_fail, False,
+                                          jnp.where(rec, True, up[q])))
+        return lax.fori_loop(0, Q, body, up)
+
+    def round_body(carry, xs):
+        up, straggling = carry
+        kr, ok_row, sm_row, sv_row = xs
+        k1, k2, k3, k4 = jax.random.split(kr, 4)
+        if spec.fail_prob:
+            up = markov_fail(up, jax.random.uniform(k1, (Q,)),
+                             jax.random.uniform(k2, (Q,)))
+        if spec.straggle_prob:
+            straggling = jnp.where(
+                straggling,
+                jax.random.uniform(k4, (Q,)) >= spec.straggle_recover_prob,
+                jax.random.uniform(k3, (Q,)) < spec.straggle_prob)
+        row = up & ok_row
+        # min_alive floor: revive the lowest-indexed dead edges
+        short = spec.min_alive - jnp.sum(row)
+        dead_rank = jnp.cumsum(~row)          # 1-based rank among dead
+        row = row | (~row & (dead_rank <= short))
+        speed_row = jnp.where(straggling, spec.straggle_factor, 1.0)
+        speed_row = jnp.where(sm_row, sv_row, speed_row)
+        return (up, straggling), (row, speed_row.astype(jnp.float32))
+
+    keys = jax.random.split(key, R)
+    _, (alive, speed) = lax.scan(
+        round_body, (jnp.ones(Q, bool), jnp.zeros(Q, bool)),
+        (keys, alive_ok, spd_mask, spd_val))
+    return {"alive": alive, "speed": speed}
+
+
+def attach_fault_batch_device(arrivals: dict, spec: FaultSpec,
+                              num_edges: int, keys) -> dict:
+    """Device twin of :func:`attach_fault_batch`: one independent in-jit
+    fault trajectory per batch element ((B, 2) ``keys``, one per element),
+    plus per-slot runtime jitter drawn directly per slot — retries reuse the
+    engine's stored ``slot_jitter``, so a per-slot draw realizes the same
+    law as the host's rid-keyed table without materializing it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving.rounds import MIN_JITTER
+
+    num_rounds = arrivals["mask"].shape[-2]
+
+    def one(key, mask):
+        k_ev, k_jit = jax.random.split(key)
+        ev = materialize_faults_device(spec, num_edges, num_rounds, k_ev)
+        out = dict(ev)
+        if spec.jitter_sigma:
+            j = jnp.exp(spec.jitter_sigma
+                        * jax.random.normal(k_jit, mask.shape))
+            out["jitter"] = jnp.where(mask, jnp.maximum(j, MIN_JITTER),
+                                      1.0).astype(jnp.float32)
+        return out
+
+    extra = jax.vmap(one)(keys, arrivals["mask"])
+    return {**{k: jnp.asarray(v) for k, v in arrivals.items()}, **extra}
+
+
 def fault_events_from_rows(events: dict, round_interval: float) -> tuple:
     """Flatten materialized per-round event tensors into the absolute-time
     :class:`repro.workloads.trace.FaultEvent` timeline a v2 trace records:

@@ -3,7 +3,9 @@ and a named scenario registry driving the simulator, instance sampling for
 training, and the benchmark sweep."""
 from repro.workloads.base import (Arrival, Merged, ServiceMix, SizeSpec,
                                   Workload, edge_weights, merge, workload_rng)
-from repro.workloads.batch import (DEADLINE_INF, materialize_round_batch,
+from repro.workloads.batch import (DEADLINE_INF, compile_device_plan,
+                                   materialize_round_batch,
+                                   materialize_round_batch_device,
                                    materialize_rounds)
 from repro.workloads.processes import (DiurnalArrivals, FlashCrowdArrivals,
                                        InhomogeneousPoisson, MMPPArrivals,
@@ -20,7 +22,8 @@ from repro.workloads.scenarios import (ScenarioSpec,
 __all__ = [
     "Arrival", "Merged", "ServiceMix", "SizeSpec", "Workload", "edge_weights",
     "merge", "workload_rng", "DEADLINE_INF", "materialize_rounds",
-    "materialize_round_batch",
+    "materialize_round_batch", "materialize_round_batch_device",
+    "compile_device_plan",
     "PoissonArrivals", "InhomogeneousPoisson", "DiurnalArrivals",
     "FlashCrowdArrivals", "MMPPArrivals",
     "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "SCHEMA_V3", "FaultEvent",

@@ -31,11 +31,16 @@ seed) produce the same arrivals.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from repro.workloads.base import Workload, workload_rng
+from repro.workloads.base import (Merged, ServiceMix, SizeSpec, Workload,
+                                  edge_weights, workload_rng)
 
 # "No deadline" sentinel in materialized tensors: matches the engine's INF
 # (serving.engine.INF) so deadline comparisons stay trivially false in f32.
@@ -149,3 +154,326 @@ def materialize_round_batch(workload: Workload, num_edges: int,
              if max_per_round is None else int(max_per_round))
     packed = [_pack(bs, width, overflow) for bs in all_buckets]
     return {k: np.stack([p[k] for p in packed]) for k in packed[0]}
+
+
+# -- device-resident materialization (pure jax.random) -----------------------
+#
+# ``materialize_round_batch_device`` is the jit-traceable twin of
+# ``materialize_round_batch``: the same arrival *laws*, drawn with
+# ``jax.random`` inside the trace, so training episodes never leave the
+# device. Equivalence to the host sampler is distributional (moment/KS tests
+# in tests/test_device_episodes.py), not draw-for-draw — the two consume
+# different rng streams.
+#
+# How a workload compiles to a device plan: every supported generator is a
+# superposition of Poisson components with a *static* per-round integrated
+# rate Lambda[r] (constant for PoissonArrivals, trapezoid-integrated for
+# DiurnalArrivals, window-overlap for FlashCrowdArrivals' spike), plus at
+# most one MMPP component whose per-round Lambda is realized in-trace by
+# scanning the 2-state chain. Per round: total count ~ Poisson(sum_c
+# Lambda_c), each arrival's component ~ Categorical(Lambda_c / sum), edge ~
+# that component's Zipf weights, so the superposition law is exact. Arrival
+# times within a round are the order statistics of n uniforms on the window
+# (exact for homogeneous components; an approximation for diurnal / partial
+# spike overlap, where the host law is density-weighted within the window —
+# a sub-round-interval effect the engine never observes, since scheduling
+# only keys on the round index). Clipping reproduces the host
+# overflow="clip" contract exactly: rids count *all* arrivals in time order
+# and each round drops its latest count-A arrivals, realized by drawing the
+# A-th order statistic of n as Beta(A, n-A+1) and the first A-1 as scaled
+# order statistics beneath it.
+
+_MMPP_SUBSTEPS = 8       # max regime switches resolved per round (P(more)
+                         # is negligible for registered sojourn scales)
+_DIURNAL_GRID = 64       # trapezoid points per round for rate integration
+
+
+@dataclasses.dataclass(frozen=True)
+class _DevicePlan:
+    """Static compilation of a workload for in-jit sampling."""
+
+    static_lam: tuple        # (R, Cs) per-round integrated rates, row-major
+    edge_probs: tuple        # (C, Q) per-component edge weights (mmpp last)
+    service_ids: tuple       # (C,) per-component constant service id
+    mmpp: Optional[tuple]    # (rates, mean_sojourn, start_state) or None
+    sizes: SizeSpec
+    mix: Optional[tuple]     # (svc_probs, deadline, deadline_frac, prio_w)
+
+
+def _diurnal_round_rates(wl, num_rounds: int, dt: float) -> np.ndarray:
+    grid = np.linspace(0.0, dt, _DIURNAL_GRID + 1)
+    lam = np.empty(num_rounds)
+    for r in range(num_rounds):
+        rates = np.maximum([wl.rate(r * dt + g) for g in grid], 0.0)
+        lam[r] = getattr(np, "trapezoid", np.trapz)(rates, grid)
+    return lam
+
+
+def _flatten_components(wl, num_edges: int, num_rounds: int, dt: float,
+                        out: list, mmpp: list) -> None:
+    # local import only to break the module cycle at definition time is not
+    # needed: processes imports base only
+    from repro.workloads import processes as P
+
+    if isinstance(wl, Merged):
+        for part in wl.parts:
+            _flatten_components(part, num_edges, num_rounds, dt, out, mmpp)
+    elif isinstance(wl, P.PoissonArrivals):
+        out.append((np.full(num_rounds, wl.rate * dt),
+                    edge_weights(num_edges, wl.edge_skew, wl.hot_edge),
+                    wl.service, wl.sizes))
+    elif isinstance(wl, P.DiurnalArrivals):
+        out.append((_diurnal_round_rates(wl, num_rounds, dt),
+                    edge_weights(num_edges, wl.edge_skew, wl.hot_edge),
+                    wl.service, wl.sizes))
+    elif isinstance(wl, P.FlashCrowdArrivals):
+        t0, t1 = wl.spike_start, wl.spike_start + wl.spike_duration
+        spike_rate = max(0.0, (wl.multiplier - 1.0) * wl.base_rate)
+        edges = np.arange(num_rounds)
+        overlap = np.maximum(
+            0.0, np.minimum(t1, (edges + 1) * dt) - np.maximum(t0, edges * dt))
+        out.append((np.full(num_rounds, wl.base_rate * dt),
+                    edge_weights(num_edges, wl.edge_skew, 0),
+                    wl.service, wl.sizes))
+        out.append((spike_rate * overlap,
+                    edge_weights(num_edges, 64.0, wl.spike_edge),
+                    wl.service, wl.sizes))
+    elif isinstance(wl, P.MMPPArrivals):
+        if len(wl.rates) != 2 or len(wl.mean_sojourn) != 2:
+            raise ValueError(
+                "materialize_round_batch_device supports 2-state MMPP only "
+                f"(got {len(wl.rates)} states)")
+        if mmpp:
+            raise ValueError("at most one MMPP component per device workload")
+        mmpp.append((tuple(float(x) for x in wl.rates),
+                     tuple(float(x) for x in wl.mean_sojourn),
+                     int(wl.start_state) % 2,
+                     edge_weights(num_edges, wl.edge_skew, wl.hot_edge),
+                     wl.service, wl.sizes))
+    else:
+        raise ValueError(
+            f"workload {type(wl).__name__} has no device sampler; use the "
+            f"host materialize_round_batch (supported: Poisson, Diurnal, "
+            f"FlashCrowd, 2-state MMPP, ServiceMix/Merged thereof)")
+
+
+def compile_device_plan(workload: Workload, num_edges: int, num_rounds: int,
+                        round_interval: float) -> _DevicePlan:
+    """Flatten a workload into the static tables the in-jit sampler needs.
+    Raises ValueError for workloads with no device law (traces, custom
+    generators, >2-state MMPP)."""
+    mix = None
+    wl = workload
+    if isinstance(wl, ServiceMix):
+        ranks = np.arange(max(1, wl.num_services), dtype=np.float64)
+        probs = (ranks + 1.0) ** (-float(wl.skew))
+        probs = probs / probs.sum()
+        prio_w = np.asarray(wl.priorities, np.float64)
+        prio_w = prio_w / prio_w.sum() if prio_w.size else None
+        deadline = tuple(wl.deadline) if wl.deadline else None
+        mix = (tuple(probs), deadline, float(wl.deadline_frac),
+               tuple(prio_w) if prio_w is not None else None)
+        wl = wl.inner
+
+    comps: list = []
+    mmpp_parts: list = []
+    _flatten_components(wl, num_edges, num_rounds, round_interval,
+                        comps, mmpp_parts)
+
+    sizes = [c[3] for c in comps] + [m[5] for m in mmpp_parts]
+    if any(s != sizes[0] for s in sizes[1:]):
+        raise ValueError(
+            "device sampler requires all merged components to share one "
+            f"SizeSpec (got {sizes})")
+
+    static_lam = (np.stack([c[0] for c in comps], axis=1) if comps
+                  else np.zeros((num_rounds, 0)))
+    edge_probs = [c[1] for c in comps]
+    service_ids = [c[2] for c in comps]
+    mmpp = None
+    if mmpp_parts:
+        rates, sojourn, start, eprobs, svc, _ = mmpp_parts[0]
+        mmpp = (rates, sojourn, start)
+        edge_probs.append(eprobs)
+        service_ids.append(svc)
+    return _DevicePlan(
+        static_lam=tuple(map(tuple, static_lam)),
+        edge_probs=tuple(map(tuple, edge_probs)),
+        service_ids=tuple(int(s) for s in service_ids),
+        mmpp=mmpp, sizes=sizes[0], mix=mix)
+
+
+def _mmpp_round_lam(key, rates, mean_sojourn, start_state, num_rounds: int,
+                    dt: float):
+    """Integrated per-round rate of one 2-state MMPP trajectory: scan the
+    alternating chain round by round, resolving up to _MMPP_SUBSTEPS regime
+    switches inside each round."""
+    rates_arr = jnp.asarray(rates, jnp.float32)
+    soj_arr = jnp.asarray(mean_sojourn, jnp.float32)
+    k0, kseq = jax.random.split(key)
+    state0 = jnp.int32(start_state)
+    rem0 = jax.random.exponential(k0) * soj_arr[state0]
+
+    def round_body(carry, kr):
+        state, rem = carry
+        left = jnp.float32(dt)
+        lam = jnp.float32(0.0)
+        ks = jax.random.split(kr, _MMPP_SUBSTEPS)
+        for i in range(_MMPP_SUBSTEPS):
+            seg = jnp.minimum(rem, left)
+            lam = lam + rates_arr[state] * seg
+            left = left - seg
+            rem = rem - seg
+            switch = rem <= 1e-12
+            new_state = 1 - state
+            new_rem = jax.random.exponential(ks[i]) * soj_arr[new_state]
+            state = jnp.where(switch, new_state, state)
+            rem = jnp.where(switch, new_rem, rem)
+        lam = lam + rates_arr[state] * jnp.maximum(left, 0.0)
+        return (state, rem), lam
+
+    _, lam = lax.scan(round_body, (state0, rem0),
+                      jax.random.split(kseq, num_rounds))
+    return lam
+
+
+def _device_sizes(spec: SizeSpec, key, shape):
+    """jax.random twin of SizeSpec.sample (same families, same clip)."""
+    p = spec.params
+    if spec.dist == "uniform":
+        lo, hi = p if p else (0.0, 1.0)
+        out = jax.random.uniform(key, shape, minval=lo, maxval=hi)
+    elif spec.dist == "fixed":
+        (value,) = p if p else (0.5,)
+        out = jnp.full(shape, value, jnp.float32)
+    elif spec.dist == "pareto":
+        alpha, scale = p if p else (1.5, 0.05)
+        # numpy's rng.pareto is the Lomax (standard Pareto minus one), so
+        # host scale*(1+pareto) == device scale*jax Pareto
+        out = scale * jax.random.pareto(key, alpha, shape)
+    elif spec.dist == "lognormal":
+        mu, sigma = p if p else (-1.5, 0.8)
+        out = jnp.exp(mu + sigma * jax.random.normal(key, shape))
+    else:
+        raise ValueError(f"unknown size distribution {spec.dist!r}")
+    return jnp.clip(out, 1e-6, spec.cap).astype(jnp.float32)
+
+
+def _device_element(key, plan: _DevicePlan, num_rounds: int, width: int,
+                    dt: float):
+    """Sample one episode's (R, A) padded arrival tensors from one PRNG key."""
+    R, A = num_rounds, width
+    (k_mmpp, k_cnt, k_time, k_beta, k_comp, k_edge, k_size, k_svc, k_dl,
+     k_dlu, k_prio) = jax.random.split(key, 11)
+
+    lam = jnp.asarray(plan.static_lam, jnp.float32)        # (R, Cs)
+    if plan.mmpp is not None:
+        rates, sojourn, start = plan.mmpp
+        lam_m = _mmpp_round_lam(k_mmpp, rates, sojourn, start, R, dt)
+        lam = jnp.concatenate([lam, lam_m[:, None]], axis=1)
+    lam_tot = jnp.sum(lam, axis=1)                          # (R,)
+
+    counts = jax.random.poisson(k_cnt, lam_tot, (R,)).astype(jnp.int32)
+    kept = jnp.minimum(counts, A)
+    clipped = counts > A
+    slot = jnp.arange(A)
+
+    # order-statistic arrival times on (r*dt, (r+1)*dt]
+    u = 1.0 - jax.random.uniform(k_time, (R, A))            # (0, 1]
+    n_plain = jnp.where(clipped, A - 1, counts)             # plain uniforms
+    u = jnp.where(slot[None, :] < n_plain[:, None], u, jnp.inf)
+    u = jnp.sort(u, axis=-1)
+    u = jnp.where(clipped[:, None] & (slot[None, :] == A - 1), 1.0, u)
+    # clipped rounds: slot A-1 is the A-th of n order stats ~ Beta(A, n-A+1);
+    # conditioned on it, slots 0..A-2 are scaled order stats beneath it
+    b_param = jnp.maximum(counts - A + 1, 1).astype(jnp.float32)
+    s = jax.random.beta(k_beta, jnp.float32(A), b_param)
+    u = u * jnp.where(clipped, s, 1.0)[:, None]
+    mask = slot[None, :] < kept[:, None]
+    t = jnp.where(mask, (jnp.arange(R, dtype=jnp.float32)[:, None] + u) * dt,
+                  0.0).astype(jnp.float32)
+
+    # component then edge: exact superposition mixture
+    frac = lam / jnp.maximum(lam_tot, 1e-12)[:, None]       # (R, C)
+    comp = jax.random.categorical(
+        k_comp, jnp.log(jnp.maximum(frac, 1e-30))[:, None, :], shape=(R, A))
+    eprob = jnp.asarray(plan.edge_probs, jnp.float32)       # (C, Q)
+    elogits = jnp.log(jnp.maximum(eprob, 1e-30))[comp]      # (R, A, Q)
+    edge = jax.random.categorical(k_edge, elogits).astype(jnp.int32)
+
+    size = _device_sizes(plan.sizes, k_size, (R, A))
+
+    if plan.mix is not None:
+        svc_probs, deadline, deadline_frac, prio_w = plan.mix
+        service = jax.random.categorical(
+            k_svc, jnp.log(jnp.asarray(svc_probs, jnp.float32)),
+            shape=(R, A)).astype(jnp.int32)
+        if deadline:
+            lo, hi = deadline
+            d = jax.random.uniform(k_dlu, (R, A), minval=lo, maxval=hi)
+            take = (jnp.ones((R, A), bool) if deadline_frac >= 1.0
+                    else jax.random.bernoulli(k_dl, deadline_frac, (R, A)))
+            dl = jnp.where(mask & take, t + d, DEADLINE_INF)
+        else:
+            dl = jnp.full((R, A), DEADLINE_INF, jnp.float32)
+        if prio_w is not None:
+            prio = jax.random.categorical(
+                k_prio, jnp.log(jnp.asarray(prio_w, jnp.float32)),
+                shape=(R, A)).astype(jnp.float32)
+        else:
+            prio = jnp.zeros((R, A), jnp.float32)
+    else:
+        service = jnp.asarray(plan.service_ids, jnp.int32)[comp]
+        dl = jnp.full((R, A), DEADLINE_INF, jnp.float32)
+        prio = jnp.zeros((R, A), jnp.float32)
+
+    # rids count every arrival (pre-clip) in global time order; each round's
+    # kept slots take the first `kept` of its contiguous range — exactly the
+    # host clip contract (the latest count-A arrivals of the round drop)
+    starts = jnp.cumsum(counts) - counts
+    rid = starts[:, None] + slot[None, :]
+    zi = jnp.zeros((R, A), jnp.int32)
+    return {
+        "t": t,
+        "src": jnp.where(mask, edge, zi),
+        "size": jnp.where(mask, size, 0.0),
+        "mask": mask,
+        "rid": jnp.where(mask, rid.astype(jnp.int32), zi),
+        "service": jnp.where(mask, service, zi),
+        "deadline": jnp.where(mask, dl, DEADLINE_INF).astype(jnp.float32),
+        "priority": jnp.where(mask, prio, 0.0).astype(jnp.float32),
+        "dropped": jnp.maximum(counts - A, 0).astype(jnp.int32),
+    }
+
+
+def materialize_round_batch_device(workload: Workload, num_edges: int,
+                                   num_rounds: int, round_interval: float,
+                                   batch: Optional[int] = None, *,
+                                   key=None, keys=None,
+                                   max_per_round: int,
+                                   overflow: str = "clip") -> dict:
+    """Device twin of :func:`materialize_round_batch`: sample a (B, R, A)
+    padded arrival batch with ``jax.random``, traceable inside jit/scan.
+
+    Pass either ``keys`` — (B, 2) per-element PRNG keys, the form the
+    sharded trainer uses so every batch element's draw is independent of
+    how the batch is split across devices — or ``key`` + ``batch`` (split
+    internally). ``max_per_round`` is required (fixed shapes) and only
+    ``overflow="clip"`` is supported: counts are traced values, so the host
+    sampler's ``overflow="error"`` cannot raise here.
+    """
+    if overflow != "clip":
+        raise ValueError(
+            "materialize_round_batch_device supports overflow='clip' only "
+            "(counts are traced; 'error' cannot raise inside jit)")
+    if max_per_round is None:
+        raise ValueError("max_per_round is required (fixed device shapes)")
+    plan = compile_device_plan(workload, num_edges, num_rounds,
+                               round_interval)
+    if keys is None:
+        if key is None or batch is None:
+            raise ValueError("pass keys=(B, 2) or key= plus batch=")
+        keys = jax.random.split(key, batch)
+    return jax.vmap(
+        lambda k: _device_element(k, plan, num_rounds, int(max_per_round),
+                                  float(round_interval)))(keys)

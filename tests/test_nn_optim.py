@@ -99,6 +99,68 @@ def test_clip_by_global_norm():
     assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
 
 
+def test_clip_by_global_norm_zero_norm_is_noop():
+    tree = {"a": jnp.zeros((4,)), "b": jnp.zeros((2, 3))}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == 0.0
+    for x in jax.tree.leaves(clipped):
+        assert np.all(np.asarray(x) == 0.0) and np.all(np.isfinite(x))
+
+
+@pytest.mark.parametrize("bad", [np.inf, -np.inf, np.nan])
+def test_clip_by_global_norm_nonfinite_grad_drops_step(bad):
+    """An inf/nan gradient leaf must zero the whole update (a naive
+    max_norm/norm scale gives inf * 0 = nan) while still reporting the
+    blown-up raw norm, so training skips the step instead of dying."""
+    tree = {"a": jnp.asarray([1.0, float(bad)]), "b": jnp.ones((3,))}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert not np.isfinite(float(norm)) or np.isnan(float(norm))
+    for x in jax.tree.leaves(clipped):
+        assert np.all(np.asarray(x) == 0.0)
+
+
+@pytest.mark.parametrize("moment_dtype", [jnp.float32, jnp.bfloat16])
+def test_adam_zeroed_grads_keep_params_and_dtype(moment_dtype):
+    """freeze_dispatch-style all-zero gradient trees: params must stay
+    bitwise put (no eps-driven drift) and every dtype must survive the
+    update, including bf16 moment storage."""
+    params = {"w": jnp.ones((4, 2), jnp.float32) * 0.5,
+              "b": jnp.zeros((2,), jnp.float32)}
+    cfg = AdamConfig(lr=1e-2, moment_dtype=moment_dtype)
+    opt = adam_init(params, cfg)
+    grads = jax.tree.map(jnp.zeros_like, params)
+    p2, o2 = adam_update(params, grads, opt, cfg)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for m in jax.tree.leaves(o2["m"]) + jax.tree.leaves(o2["v"]):
+        assert m.dtype == moment_dtype
+        assert np.all(np.asarray(m, np.float32) == 0.0)
+    assert int(o2["step"]) == 1
+    # a later real gradient still moves params finitely
+    grads["w"] = jnp.ones_like(grads["w"])
+    p3, o3 = adam_update(p2, grads, o2, cfg)
+    assert np.all(np.isfinite(np.asarray(p3["w"], np.float32)))
+    assert not np.array_equal(np.asarray(p3["w"], np.float32),
+                              np.asarray(p2["w"], np.float32))
+
+
+def test_adam_after_nonfinite_clip_recovers():
+    """clip -> adam composition under a gradient blow-up: the clipped
+    (all-zero) update leaves params finite and the very next clean step
+    trains normally."""
+    params = {"w": jnp.full((3,), 0.25)}
+    cfg = AdamConfig(lr=1e-2)
+    opt = adam_init(params, cfg)
+    bad = {"w": jnp.asarray([np.inf, 1.0, -2.0])}
+    clipped, _ = clip_by_global_norm(bad, 1.0)
+    p2, o2 = adam_update(params, clipped, opt, cfg)
+    np.testing.assert_array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
+    good, _ = clip_by_global_norm({"w": jnp.ones((3,))}, 1.0)
+    p3, _ = adam_update(p2, good, o2, cfg)
+    assert np.all(np.isfinite(np.asarray(p3["w"])))
+
+
 @hypothesis.settings(max_examples=20, deadline=None)
 @hypothesis.given(seed=st.integers(0, 1000))
 def test_int8_quantization_error_bound(seed):

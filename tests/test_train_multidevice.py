@@ -1,0 +1,30 @@
+"""Data-parallel temporal training equivalence on a host-forced 8-device
+mesh:
+
+the scanned-epoch REINFORCE step (device-generated episodes, per-element
+PRNG keys) run on one device and shard_map'd over an 8-shard ("fleet",)
+mesh with pmean-averaged grads must produce the same params / opt state
+to 1e-5 (and metrics to 1e-4), for layer norm, warmed batch norm, and a
+faulted chaos scenario; the full ``temporal_train(mesh=...)`` loop must
+match the meshless epoch loop batch-for-batch too.
+
+Runs in a subprocess because the device count must be forced before jax
+initializes (the main test process keeps the real single-device view)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_train_multidevice_equivalence():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["TF_CPP_MIN_LOG_LEVEL"] = "3"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "train_child.py")],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "TRAIN_MULTIDEVICE_OK" in proc.stdout, proc.stdout

@@ -1,0 +1,133 @@
+"""Child process for tests/test_train_multidevice.py — needs 8 host
+devices, which must be forced before jax initializes (subprocess, same
+pattern as fleet_child.py).
+
+Pins data-parallel temporal training to single-device training: the same
+scanned-epoch step (device-generated episodes, per-element PRNG keys) run
+on one device and shard_map'd over an 8-shard ("fleet",) mesh with
+pmean-averaged grads must produce the same updated params / opt state /
+metrics to 1e-5 (float reassociation across the psum is the only
+difference), and the full ``temporal_train(mesh=...)`` loop must match the
+meshless epoch loop on its history too.
+
+Normalization caveat this test pins around: with ``norm="batch"`` and a
+never-trained norm state, eval-mode batchnorm falls back to statistics of
+the *local* batch (nn.layers.batchnorm_apply), which couples elements —
+per-shard stats differ from global-batch stats, so exact shard parity
+holds only for decoupled normalization: ``norm="layer"``, or batch norm
+with populated running stats (count > 0), which is what warm-started
+training (get_resilient_policy / get_cloud_policy) uses.
+
+Tolerance note: per-element REINFORCE grads nearly cancel, so the
+batch-mean grad can be small relative to its summands and the
+single-reduce vs psum reassociation noise is then a sizable *fraction*
+of it; Adam's ``g / (sqrt(v) + eps)`` normalization amplifies that
+fraction to O(lr) parameter noise (a sign flip of a near-zero gradient
+moves the update by 2*lr).  The test adam uses ``eps=1e-3`` so
+near-zero gradients update ~linearly in g instead of sign-like, putting
+the noise floor orders of magnitude under the 1e-5 pin without
+weakening the structural property being checked (identical episodes,
+pmean'd grads, identical update rule)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import PolicyConfig
+from repro.core.train import (TemporalRLConfig, make_temporal_epoch_step,
+                              temporal_train)
+from repro.launch.mesh import make_fleet_mesh
+from repro.optim import AdamConfig, adam_init
+from repro.serving.engine import EngineConfig
+
+B, K = 8, 2
+
+
+def base_cfg(scenario: str, norm: str = "layer") -> TemporalRLConfig:
+    return TemporalRLConfig(
+        policy=PolicyConfig(d_model=32, ff_hidden=64, edge_layers=1,
+                            request_layers=1, norm=norm),
+        engine=EngineConfig(num_edges=3, num_rounds=4, max_per_round=8),
+        scenario=scenario,
+        batch_size=B, lr=2e-5, num_batches=2 * K, seed=0,
+        device_episodes=True, epoch_len=K)
+
+
+def tree_close(a, b, tol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float64),
+                                   np.asarray(y, np.float64),
+                                   rtol=tol, atol=tol)
+
+
+def warm_norm_state(state):
+    """Mark every batchnorm layer as trained (count=1, mean 0 / var 1) so
+    eval-mode BN uses the stored per-element statistics."""
+    from jax.tree_util import tree_map_with_path
+
+    def bump(path, x):
+        return np.ones_like(x) if str(path[-1]) == "['count']" else x
+
+    return tree_map_with_path(bump, state)
+
+
+def check_sharded_step_matches_single(scenario: str, norm: str = "layer"):
+    assert len(jax.devices()) == 8, jax.devices()
+    cfg = base_cfg(scenario, norm)
+    mesh = make_fleet_mesh()
+    assert dict(mesh.shape) == {"fleet": 8}, mesh
+
+    from repro.core.policy import corais_init
+    from repro.serving import engine as engine_lib
+    from repro.core.train import _cluster_seeds, _element_keys
+
+    params, state = corais_init(jax.random.PRNGKey(0), cfg.policy)
+    if norm == "batch":
+        state = warm_norm_state(state)
+    adam = AdamConfig(lr=cfg.lr, eps=1e-3)
+    opt = adam_init(params, adam)
+    ecfg = cfg.engine
+    stacks = [engine_lib.init_batch(ecfg, _cluster_seeds(cfg, bi))
+              for bi in range(K)]
+    sim0 = {k: np.stack([s[k] for s in stacks]) for k in stacks[0]}
+    key = jax.random.PRNGKey(cfg.seed)
+    ekeys = np.stack([np.asarray(_element_keys(key, bi, B))
+                      for bi in range(K)])
+
+    single, _ = make_temporal_epoch_step(cfg, adam)
+    sharded, _ = make_temporal_epoch_step(cfg, adam, mesh=mesh)
+    p1, o1, m1 = single(params, state, opt, sim0, ekeys)
+    p2, o2, m2 = sharded(params, state, opt, sim0, ekeys)
+    tree_close(p1, p2, 1e-5)
+    tree_close(o1, o2, 1e-5)
+    for k in m1:
+        np.testing.assert_allclose(np.asarray(m1[k]), np.asarray(m2[k]),
+                                   rtol=1e-4, atol=1e-5, err_msg=k)
+    print(f"sharded step == single step ({scenario}, norm={norm}): "
+          f"loss {np.asarray(m1['loss'])} vs {np.asarray(m2['loss'])}")
+
+
+def check_sharded_train_loop_matches(scenario: str):
+    cfg = base_cfg(scenario)
+    adam = AdamConfig(lr=cfg.lr, eps=1e-3)
+    p1, _, o1, h1 = temporal_train(cfg, adam_cfg=adam)
+    p2, _, o2, h2 = temporal_train(cfg, mesh=make_fleet_mesh(), adam_cfg=adam)
+    tree_close(p1, p2, 1e-5)
+    assert [h["batch"] for h in h1] == [h["batch"] for h in h2]
+    for a, b in zip(h1, h2):
+        np.testing.assert_allclose(a["cost_mean"], b["cost_mean"],
+                                   rtol=1e-4, atol=1e-5)
+    print(f"temporal_train(mesh) == temporal_train() ({scenario}): "
+          f"final cost {h1[-1]['cost_mean']:.6f}")
+
+
+if __name__ == "__main__":
+    check_sharded_step_matches_single("uniform_iid")
+    check_sharded_step_matches_single("uniform_iid", norm="batch")
+    check_sharded_step_matches_single("chaos-straggler-storm")
+    check_sharded_train_loop_matches("uniform_iid")
+    print("TRAIN_MULTIDEVICE_OK")
